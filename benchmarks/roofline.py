@@ -1,0 +1,83 @@
+"""Roofline report: per (arch × shape × mesh) terms from the dry-run.
+
+Reads artifacts/dryrun/*.json (produced by launch/dryrun.py) and prints
+the §Roofline table: three terms in seconds, the dominant bottleneck,
+MODEL_FLOPS/HLO_FLOPs, and the one-line lever per cell.
+
+Hardware constants (TPU v5e class, DESIGN §7):
+  197 TFLOP/s bf16 · 819 GB/s HBM · ~50 GB/s/link ICI.
+"""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+from typing import Dict, List
+
+ARTIFACTS = Path(__file__).resolve().parent.parent / "artifacts" / "dryrun"
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+_LEVERS = {
+    "compute_s": "raise useful-FLOP ratio (less remat/causal waste) or "
+                 "shrink microbatch count",
+    "memory_s": "fuse/recompute streams; shard or offload the biggest "
+                "resident tensor",
+    "collective_s": "reshard to cut all-gather volume; overlap or "
+                    "compress collectives",
+}
+
+
+def load_cells(mesh: str = "single") -> List[Dict]:
+    cells = []
+    for p in sorted(ARTIFACTS.glob(f"*__{mesh}.json")):
+        rec = json.loads(p.read_text())
+        cells.append(rec)
+    return cells
+
+
+def report(mesh: str = "single") -> List[Dict]:
+    cells = load_cells(mesh)
+    if not cells:
+        print(f"[roofline] no dry-run artifacts for mesh={mesh}; run "
+              f"`python -m repro.launch.dryrun --all` first")
+        return []
+    print(f"\n== Roofline ({mesh}-pod mesh) ==")
+    hdr = (f"{'arch':26s} {'shape':12s} {'compute_s':>10s} {'memory_s':>10s}"
+           f" {'coll_s':>10s} {'dominant':>12s} {'useful':>7s} "
+           f"{'peak_GiB':>9s}")
+    print(hdr)
+    rows = []
+    for rec in cells:
+        arch, shape = rec["arch"], rec["shape"]
+        if rec["status"] == "skipped":
+            print(f"{arch:26s} {shape:12s} {'—— skipped (by design): ':>34s}"
+                  f"{rec['reason'][:40]}")
+            continue
+        t = rec["roofline"]
+        mem = rec.get("memory", {})
+        peak = mem.get("peak_bytes_per_device_tpu_adjusted",
+                       mem.get("peak_bytes_per_device", 0)) / 2 ** 30
+        print(f"{arch:26s} {shape:12s} {t['compute_s']:10.3f} "
+              f"{t['memory_s']:10.3f} {t['collective_s']:10.3f} "
+              f"{t['dominant']:>12s} {t['useful_flop_ratio']:7.2f} "
+              f"{peak:9.2f}")
+        rows.append({"arch": arch, "shape": shape, **t,
+                     "peak_gib": peak})
+    # bottleneck census
+    from collections import Counter
+    census = Counter(r["dominant"] for r in rows)
+    print(f"\ndominant-term census ({mesh}): {dict(census)}")
+    worst = sorted(rows, key=lambda r: -max(
+        r["compute_s"], r["memory_s"], r["collective_s"]))[:3]
+    for r in worst:
+        print(f"  lever[{r['arch']} × {r['shape']}]: "
+              f"{_LEVERS[r['dominant']]}")
+    return rows
+
+
+def run() -> None:
+    for mesh in ("single", "multi"):
+        report(mesh)

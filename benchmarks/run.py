@@ -1,0 +1,32 @@
+"""Benchmark harness: one entry per paper table + roofline + kernels.
+
+    PYTHONPATH=src python -m benchmarks.run [--scale S] [--skip-tables]
+
+Prints ``name,us_per_call,derived`` CSV lines per bench plus the
+paper-table comparisons and the 40-cell roofline report.
+"""
+
+from __future__ import annotations
+
+import argparse
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", type=float, default=1.0,
+                    help="Track-A workload scale (1.0 = paper scale)")
+    ap.add_argument("--skip-tables", action="store_true")
+    ap.add_argument("--skip-kernels", action="store_true")
+    args = ap.parse_args()
+
+    from benchmarks import kernel_micro, roofline, tables
+
+    if not args.skip_tables:
+        tables.run(scale=args.scale)
+    roofline.run()
+    if not args.skip_kernels:
+        kernel_micro.run()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,56 @@
+"""Paper-table reproduction benchmarks (Tables I, II, III).
+
+One function per table; each runs the Track-A simulator over the paper's
+workload suite (CNN/RNN/Transformer) for all four configurations and
+prints simulated-vs-published rows plus the qualitative trend verdict.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Dict
+
+from repro.core.calibration import compare_to_paper, run_suite, trend_ok
+
+
+def _rows(results, metrics):
+    print(f"{'config':14s} " + "".join(f"{m:>26s}" for m in metrics))
+    from repro.core.presets import PAPER_TABLE
+    for cfg in ("baseline", "shared_l3", "prefetch", "tensor_aware"):
+        cells = []
+        for m in metrics:
+            sim = results[cfg][m]
+            pub = PAPER_TABLE[cfg][m]
+            cells.append(f"{sim:9.2f} (paper {pub:7.2f})")
+        print(f"{cfg:14s} " + "".join(f"{c:>26s}" for c in cells))
+
+
+def table1_latency_bandwidth(results: Dict) -> None:
+    print("\n== Table I: latency / bandwidth ==")
+    _rows(results, ["latency_ns", "bandwidth_gbps"])
+
+
+def table2_hit_rate(results: Dict) -> None:
+    print("\n== Table II: cache hit rate ==")
+    _rows(results, ["hit_rate"])
+
+
+def table3_energy(results: Dict) -> None:
+    print("\n== Table III: energy per operation ==")
+    _rows(results, ["energy_uj"])
+
+
+def run(scale: float = 1.0) -> Dict:
+    t0 = time.time()
+    results = run_suite(scale=scale)
+    table1_latency_bandwidth(results)
+    table2_hit_rate(results)
+    table3_energy(results)
+    print(f"\nmonotone trend (all 4 metrics, all rows): {trend_ok(results)}")
+    rel = [abs(r["rel_err"]) for r in compare_to_paper(results)]
+    print(f"mean |rel err| vs paper: {sum(rel)/len(rel):.3f} "
+          f"(n={len(rel)} cells)  [{time.time()-t0:.0f}s @ scale={scale}]")
+    for r in compare_to_paper(results):
+        print(f"  table,{r['config']},{r['metric']},{r['paper']},"
+              f"{r['simulated']},{r['rel_err']}")
+    return results

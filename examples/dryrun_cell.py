@@ -1,0 +1,39 @@
+"""Inspect one dry-run cell: lower an (arch × shape) onto the 256-chip
+production mesh and print its roofline terms + collective schedule.
+
+Run:  PYTHONPATH=src python examples/dryrun_cell.py --arch zamba2-2.7b \
+          --shape prefill_32k
+
+(This example re-executes the lowering; launch/dryrun.py caches the
+whole 40-cell matrix under artifacts/dryrun/.)
+"""
+
+import argparse
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="zamba2-2.7b")
+    ap.add_argument("--shape", default="prefill_32k")
+    ap.add_argument("--multi-pod", action="store_true")
+    args = ap.parse_args()
+
+    # the dryrun module sets XLA_FLAGS before importing jax — import it
+    # FIRST so this process sees the 512 placeholder devices
+    from repro.launch.dryrun import run_cell
+
+    rec = run_cell(args.arch, args.shape, args.multi_pod, save=False)
+    if rec["status"] != "ok":
+        raise SystemExit(f"cell failed: {rec}")
+    print("\ncollective schedule (per device, executed):")
+    for op, nbytes in rec["hlo"]["collective_bytes"].items():
+        n = rec["hlo"]["collective_counts"].get(op, 0)
+        print(f"  {op:20s} {n:10.0f} ops   {nbytes / 1e9:8.2f} GB")
+    t = rec["roofline"]
+    print(f"\nroofline terms: compute {t['compute_s']:.3f}s | memory "
+          f"{t['memory_s']:.3f}s | collective {t['collective_s']:.3f}s "
+          f"→ dominant: {t['dominant']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,41 @@
+"""HERMES simulator walk-through: reproduce one paper figure end to end.
+
+Runs the four paper configurations over the three workload classes and
+prints the Table-I/II/III style comparison — the faithful-reproduction
+demo (benchmarks/tables.py runs the full-scale version).
+
+Run:  PYTHONPATH=src python examples/hermes_sim.py [--scale 0.25]
+"""
+
+import argparse
+
+from repro.core import CONFIGS
+from repro.core.calibration import compare_to_paper, run_suite, trend_ok
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", type=float, default=0.25)
+    args = ap.parse_args()
+
+    print(f"[hermes_sim] simulating {len(CONFIGS)} configurations × 3 "
+          f"workloads @ scale={args.scale} ...")
+    results = run_suite(scale=args.scale)
+    print(f"\n{'config':14s} {'lat(ns)':>8s} {'bw(GB/s)':>9s} "
+          f"{'hit':>6s} {'µJ/op':>7s}")
+    for cfg in ("baseline", "shared_l3", "prefetch", "tensor_aware"):
+        r = results[cfg]
+        print(f"{cfg:14s} {r['latency_ns']:8.1f} {r['bandwidth_gbps']:9.1f}"
+              f" {r['hit_rate']:6.3f} {r['energy_uj']:7.1f}")
+    print(f"\nqualitative trend (technique stack helps everywhere): "
+          f"{trend_ok(results)}")
+    print("per-cell deltas vs the published tables "
+          "(full scale in benchmarks/run.py):")
+    for row in compare_to_paper(results):
+        print(f"  {row['config']:13s} {row['metric']:15s} "
+              f"paper={row['paper']:<7} sim={row['simulated']:<8} "
+              f"rel_err={row['rel_err']:+.2f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,208 @@
+"""Model/run configuration system.
+
+One ``ModelConfig`` describes any architecture in the assigned pool
+(dense / MoE / SSM / hybrid / VLM / audio).  ``RunConfig`` adds the
+execution shape (batch, sequence, parallelism, precision, HERMES-TPU
+features).  Everything is a frozen dataclass so configs hash and compare.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                   # dense | moe | ssm | hybrid | vlm | audio
+    n_layers: int
+    d_model: int
+    n_heads: int                  # 0 for attention-free archs
+    n_kv_heads: int = 0
+    head_dim: int = 0             # derived if 0
+    d_ff: int = 0
+    vocab_size: int = 32000
+    act: str = "silu"             # silu (SwiGLU) | gelu (GeGLU)
+    norm_eps: float = 1e-5
+    rope_theta: float = 500_000.0
+    tie_embeddings: bool = False
+
+    # --- MoE ---
+    n_experts: int = 0
+    experts_per_token: int = 0
+    moe_every: int = 1            # a MoE FFN every k-th layer (1 = all)
+    d_ff_expert: int = 0
+    n_shared_experts: int = 0
+    capacity_factor: float = 1.25
+    router_aux_weight: float = 0.01
+    # expert sharding layout (EXPERIMENTS §Perf, MoE hillclimb):
+    #   ep_tp   — E over DATA × FF over MODEL: weights never move, tokens
+    #             all-to-all.  Wins for low top-k / wide experts (llama4
+    #             top-1: collective −64%).
+    #   ep_fsdp — E over MODEL × d over DATA (FSDP-gathered weights).
+    #             Wins for high top-k / narrow experts (qwen3 top-8: the
+    #             k-duplicated dispatch traffic outweighs weight moves).
+    #   "" (auto) — ep_tp iff experts_per_token ≤ 2.
+    moe_layout: str = ""
+
+    # --- SSM (Mamba) ---
+    ssm_version: int = 0          # 0 = none, 1 = Mamba1, 2 = Mamba2/SSD
+    ssm_state: int = 0
+    d_inner: int = 0              # derived (2*d_model) if 0
+    conv_width: int = 4
+    ssm_heads: int = 0            # Mamba2 heads (derived if 0)
+    ssm_chunk: int = 128          # SSD chunk length
+    dt_rank: int = 0              # Mamba1 Δ rank (derived if 0)
+
+    # --- hybrid (Zamba2-style shared attention block) ---
+    shared_attn_every: int = 0    # apply the shared block every k SSM layers
+
+    # --- VLM (cross-attention image layers) ---
+    cross_attn_every: int = 0     # every k-th layer is cross-attention
+    n_img_tokens: int = 0
+
+    # --- audio (codebook stack) ---
+    n_codebooks: int = 0
+
+    def __post_init__(self):
+        if self.head_dim == 0 and self.n_heads:
+            object.__setattr__(self, "head_dim", self.d_model // self.n_heads)
+        if self.n_kv_heads == 0 and self.n_heads:
+            object.__setattr__(self, "n_kv_heads", self.n_heads)
+        if self.ssm_version and self.d_inner == 0:
+            object.__setattr__(self, "d_inner", 2 * self.d_model)
+        if self.ssm_version == 2 and self.ssm_heads == 0:
+            object.__setattr__(self, "ssm_heads", max(1, self.d_inner // 64))
+        if self.ssm_version == 1 and self.dt_rank == 0:
+            object.__setattr__(self, "dt_rank", max(1, self.d_model // 16))
+
+    # -- derived quantities ---------------------------------------------------
+    @property
+    def moe_layout_resolved(self) -> str:
+        if self.moe_layout:
+            return self.moe_layout
+        return "ep_tp" if self.experts_per_token <= 2 else "ep_fsdp"
+
+    @property
+    def attention_free(self) -> bool:
+        return self.family == "ssm"
+
+    @property
+    def sub_quadratic(self) -> bool:
+        """True if the arch supports 500k-token decode (SSM state, not a
+        growing quadratic KV)."""
+        return self.family in ("ssm", "hybrid")
+
+    def param_count(self) -> int:
+        """Analytic total parameter count (used for roofline MODEL_FLOPS)."""
+        d, dff, v = self.d_model, self.d_ff, self.vocab_size
+        kvd = self.n_kv_heads * self.head_dim if self.n_heads else 0
+        qd = self.n_heads * self.head_dim if self.n_heads else 0
+        n = 0
+        per_attn = d * qd + d * 2 * kvd + qd * d
+        per_mlp = 3 * d * dff if dff else 0
+        for i in range(self.n_layers):
+            if self.family == "ssm":
+                n += self._ssm_params()
+                continue
+            if self.family == "hybrid":
+                n += self._ssm_params()
+                continue
+            is_cross = (self.cross_attn_every
+                        and (i % self.cross_attn_every) == self.cross_attn_every - 1)
+            n += per_attn if not is_cross else per_attn + d * 2 * kvd
+            if self.n_experts and (i % self.moe_every) == self.moe_every - 1:
+                dffe = self.d_ff_expert or dff
+                n += self.n_experts * 3 * d * dffe + d * self.n_experts
+                if self.n_shared_experts:
+                    n += self.n_shared_experts * 3 * d * dffe
+                if self.moe_every > 1:
+                    pass  # this layer's dense FFN replaced by MoE
+            else:
+                n += per_mlp
+            n += 2 * d  # norms
+        if self.family == "hybrid" and self.shared_attn_every:
+            n += per_attn * 2 + 3 * (2 * d) * self.d_ff  # shared block (concat in)
+        n += v * d * (1 if self.tie_embeddings else 2)
+        if self.n_codebooks:
+            n += (self.n_codebooks - 1) * v * d  # extra codebook embed+heads
+        return n
+
+    def active_param_count(self) -> int:
+        """Active params per token (MoE top-k); = param_count for dense."""
+        if not self.n_experts:
+            return self.param_count()
+        d = self.d_model
+        dffe = self.d_ff_expert or self.d_ff
+        total = self.param_count()
+        moe_layers = self.n_layers // self.moe_every
+        all_experts = moe_layers * self.n_experts * 3 * d * dffe
+        active = moe_layers * (self.experts_per_token
+                               + self.n_shared_experts) * 3 * d * dffe
+        return total - all_experts + active
+
+    def _ssm_params(self) -> int:
+        d, di, ns = self.d_model, self.d_inner, self.ssm_state
+        if self.ssm_version == 1:
+            return (d * 2 * di + di * self.conv_width
+                    + di * (self.dt_rank + 2 * ns) + self.dt_rank * di
+                    + di * ns + di + di * d + 2 * d)
+        # Mamba2: in_proj produces (z, x, B, C, dt)
+        h = self.ssm_heads
+        g = 1  # n_groups
+        return (d * (2 * di + 2 * g * ns + h) + di * self.conv_width
+                + h * 2 + di + di * d + 2 * d)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    """One input-shape cell from the assignment."""
+
+    name: str                     # train_4k | prefill_32k | decode_32k | long_500k
+    kind: str                     # train | prefill | decode
+    seq_len: int
+    global_batch: int
+
+
+SHAPES = {
+    "train_4k": ShapeConfig("train_4k", "train", 4096, 256),
+    "prefill_32k": ShapeConfig("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": ShapeConfig("decode_32k", "decode", 32768, 128),
+    "long_500k": ShapeConfig("long_500k", "decode", 524288, 1),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class RunConfig:
+    """Execution configuration (precision, parallelism, HERMES features)."""
+
+    microbatches: int = 16            # grad-accumulation steps per train step
+    optimizer: str = "adamw"          # adamw | adafactor (400B-class)
+    param_dtype: str = "float32"      # master copy (bf16 for ≥300B @ 256 chips)
+    compute_dtype: str = "bfloat16"
+    optimizer_dtype: str = "float32"  # bf16 for ≥100B models
+    grad_dtype: str = "float32"       # accumulation dtype (bf16 for ≥300B)
+    remat: str = "full"               # full | dots | none
+    act_seq_shard: bool = False       # shard saved residuals' seq dim over
+                                      # MODEL between layers (16× less remat
+                                      # memory for +2 allgather/layer)
+    fsdp_pod: bool = False            # FSDP spans the pod axis too (≥300B:
+                                      # halves per-chip state on multi-pod,
+                                      # at one cross-DCN all-gather/layer)
+    seq_parallel: bool = False        # Megatron-SP (AG-in/RS-out inside
+                                      # attention/mlp).  OFF by default:
+                                      # XLA:CPU's partitioner lowers the
+                                      # RS as AR+slice (+14% collective —
+                                      # refuted there, EXPERIMENTS §Perf);
+                                      # enable on TPU toolchains where the
+                                      # AR→RS rewrite exists.
+    use_flash_kernel: bool = False    # Pallas path (TPU); jnp ref on CPU
+    grad_compression: str = "none"    # none | int8 (pod-axis error feedback)
+    seq_shard: bool = False           # sequence parallelism for long contexts
+    learning_rate: float = 3e-4
+    weight_decay: float = 0.1
+    beta1: float = 0.9
+    beta2: float = 0.95
+    kv_page_size: int = 256           # paged KV cache (HERMES tensor-aware)
+    hbm_kv_budget_frac: float = 0.6   # fraction of KV kept in the HBM tier

@@ -1,0 +1,37 @@
+"""deepseek-coder-33b — dense GQA transformer (llama arch).
+
+[arXiv:2401.14196; hf]  62L d_model=7168 56H (GQA kv=8) d_ff=19200
+vocab=32256, head_dim=128.
+
+Pure full attention → ``long_500k`` skipped (DESIGN §3).
+"""
+
+from repro.configs.base import ModelConfig
+
+ARCH_ID = "deepseek-coder-33b"
+
+FULL = ModelConfig(
+    name=ARCH_ID,
+    family="dense",
+    n_layers=62,
+    d_model=7168,
+    n_heads=56,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=19200,
+    vocab_size=32256,
+    rope_theta=100_000.0,
+)
+
+SMOKE = ModelConfig(
+    name=ARCH_ID + "-smoke",
+    family="dense",
+    n_layers=2,
+    d_model=64,
+    n_heads=8,
+    n_kv_heads=2,
+    d_ff=192,
+    vocab_size=256,
+)
+
+RUN_OVERRIDES = {"act_seq_shard": True}

@@ -1,0 +1,39 @@
+"""falcon-mamba-7b — pure Mamba1 SSM (attention-free).
+
+[arXiv:2410.05355; unverified]  64L d_model=4096 (attn-free) d_ff=0
+vocab=65024, ssm_state=16.  d_inner=8192, conv_width=4, dt_rank=256.
+
+DESIGN §3 Arch-applicability: attention-specific HERMES techniques are
+N/A; the technique applies to the selective scan instead — the O(1)
+recurrent state is the pinned high-reuse tensor (kernels/mamba_scan).
+Runs ``long_500k`` (decode is O(1) in context).
+"""
+
+from repro.configs.base import ModelConfig
+
+ARCH_ID = "falcon-mamba-7b"
+
+FULL = ModelConfig(
+    name=ARCH_ID,
+    family="ssm",
+    n_layers=64,
+    d_model=4096,
+    n_heads=0,
+    d_ff=0,
+    vocab_size=65024,
+    ssm_version=1,
+    ssm_state=16,
+)
+
+SMOKE = ModelConfig(
+    name=ARCH_ID + "-smoke",
+    family="ssm",
+    n_layers=2,
+    d_model=64,
+    n_heads=0,
+    d_ff=0,
+    vocab_size=256,
+    ssm_version=1,
+    ssm_state=8,
+    ssm_chunk=16,
+)

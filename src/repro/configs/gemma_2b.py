@@ -1,0 +1,43 @@
+"""gemma-2b — dense MQA transformer with GeGLU and 256k vocab.
+
+[arXiv:2403.08295; hf]  18L d_model=2048 8H (MQA kv=1) d_ff=16384
+vocab=256000, head_dim=256 (explicit — not d_model/n_heads), GeGLU.
+
+The giant embedding table (256k x 2048 = 34% of all params) makes this
+the embedding-pathway stress case for tensor-aware sharding.
+
+Pure full attention → ``long_500k`` skipped (DESIGN §3).
+"""
+
+from repro.configs.base import ModelConfig
+
+ARCH_ID = "gemma-2b"
+
+FULL = ModelConfig(
+    name=ARCH_ID,
+    family="dense",
+    n_layers=18,
+    d_model=2048,
+    n_heads=8,
+    n_kv_heads=1,
+    head_dim=256,
+    d_ff=16384,
+    vocab_size=256000,
+    act="gelu",
+    rope_theta=10_000.0,
+    tie_embeddings=True,
+)
+
+SMOKE = ModelConfig(
+    name=ARCH_ID + "-smoke",
+    family="dense",
+    n_layers=2,
+    d_model=64,
+    n_heads=4,
+    n_kv_heads=1,
+    head_dim=32,
+    d_ff=128,
+    vocab_size=512,
+    act="gelu",
+    tie_embeddings=True,
+)

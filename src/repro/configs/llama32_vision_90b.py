@@ -1,0 +1,48 @@
+"""llama-3.2-vision-90b — VLM with cross-attention image layers.
+
+[hf:meta-llama/Llama-3.2-11B-Vision (family); unverified]
+100L d_model=8192 64H (GQA kv=8) d_ff=28672 vocab=128256, head_dim=128.
+100 layers = 80 self-attention + 20 cross-attention (every 5th layer is
+cross-attention, Llama-3.2 style).
+
+Modality frontend is a STUB per the assignment: ``input_specs()``
+supplies precomputed patch embeddings (B, n_img_tokens, d_model); the
+vision encoder itself is out of scope.  The read-only image KV is the
+ideal tensor-aware pinning target (DESIGN §3).
+
+Pure full attention → ``long_500k`` skipped (DESIGN §3).
+"""
+
+from repro.configs.base import ModelConfig
+
+ARCH_ID = "llama-3.2-vision-90b"
+
+FULL = ModelConfig(
+    name=ARCH_ID,
+    family="vlm",
+    n_layers=100,
+    d_model=8192,
+    n_heads=64,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=28672,
+    vocab_size=128256,
+    rope_theta=500_000.0,
+    cross_attn_every=5,     # 100 = 20 units x (4 self + 1 cross)
+    n_img_tokens=1600,      # ~1 tile of 40x40 patches (stub frontend)
+)
+
+SMOKE = ModelConfig(
+    name=ARCH_ID + "-smoke",
+    family="vlm",
+    n_layers=4,
+    d_model=64,
+    n_heads=4,
+    n_kv_heads=2,
+    d_ff=128,
+    vocab_size=256,
+    cross_attn_every=2,
+    n_img_tokens=16,
+)
+
+RUN_OVERRIDES = {"optimizer_dtype": "bfloat16", "act_seq_shard": True}

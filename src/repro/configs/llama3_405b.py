@@ -1,0 +1,53 @@
+"""llama3-405b — dense GQA transformer with 128k vocab.
+
+[arXiv:2407.21783; unverified]  126L d_model=16384 128H (GQA kv=8)
+d_ff=53248 vocab=128256, head_dim=128.
+
+The stress test for the HERMES hybrid-memory tier (DESIGN §3): fp32
+Adam states do not fit 256 chips → bf16 optimizer states (RunConfig
+override below) + host offload option in tpu/offload.py.
+
+Pure full attention → ``long_500k`` skipped (DESIGN §3).
+"""
+
+from repro.configs.base import ModelConfig
+
+ARCH_ID = "llama3-405b"
+
+FULL = ModelConfig(
+    name=ARCH_ID,
+    family="dense",
+    n_layers=126,
+    d_model=16384,
+    n_heads=128,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=53248,
+    vocab_size=128256,
+    rope_theta=500_000.0,
+)
+
+SMOKE = ModelConfig(
+    name=ARCH_ID + "-smoke",
+    family="dense",
+    n_layers=2,
+    d_model=64,
+    n_heads=8,
+    n_kv_heads=2,
+    d_ff=224,
+    vocab_size=512,
+)
+
+# 405B at 256 × 16 GiB chips is capacity-critical: 8 B/param (fp32 master
+# + moments) alone would be 12.7 GiB/chip before activations.  We run the
+# documented lean recipe — bf16 params/moments/grads + sequence-sharded
+# remat buffers (DESIGN §4, EXPERIMENTS §Dry-run).  fp32-master training
+# needs ≥2 pods with FSDP spanning the pod axis.
+RUN_OVERRIDES = {
+    "param_dtype": "bfloat16",
+    "optimizer": "adafactor",
+    "optimizer_dtype": "bfloat16",
+    "grad_dtype": "bfloat16",
+    "act_seq_shard": True,
+    "fsdp_pod": True,
+}

@@ -1,0 +1,59 @@
+"""llama4-maverick-400b-a17b — MoE 128e top-1, interleaved dense/MoE.
+
+[hf:meta-llama/Llama-4-Scout-17B-16E (family); unverified]
+48L d_model=5120 40H (GQA kv=8) d_ff=8192 (per-expert) vocab=202048,
+MoE 128 routed experts top-1 + 1 shared expert, head_dim=128.
+
+Public Maverick config interleaves dense and MoE FFN layers 1:1
+(interleave_moe_layer_step=2); dense-layer FFN width is 16384
+(2x the expert width).  Assumption recorded in DESIGN §5.3.
+"""
+
+from repro.configs.base import ModelConfig
+
+ARCH_ID = "llama4-maverick-400b-a17b"
+
+FULL = ModelConfig(
+    name=ARCH_ID,
+    family="moe",
+    n_layers=48,
+    d_model=5120,
+    n_heads=40,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=16384,             # dense-layer FFN width (interleaved layers)
+    d_ff_expert=8192,       # routed / shared expert width
+    vocab_size=202048,
+    n_experts=128,
+    experts_per_token=1,
+    n_shared_experts=1,
+    moe_every=2,            # dense, MoE, dense, MoE, ...
+    rope_theta=500_000.0,
+)
+
+SMOKE = ModelConfig(
+    name=ARCH_ID + "-smoke",
+    capacity_factor=8.0,
+    family="moe",
+    n_layers=4,
+    d_model=64,
+    n_heads=4,
+    n_kv_heads=2,
+    d_ff=128,
+    d_ff_expert=96,
+    vocab_size=256,
+    n_experts=8,
+    experts_per_token=1,
+    n_shared_experts=1,
+    moe_every=2,
+)
+
+# 400B MoE: lean recipe as llama3-405b (DESIGN §4).
+RUN_OVERRIDES = {
+    "param_dtype": "bfloat16",
+    "optimizer": "adafactor",
+    "optimizer_dtype": "bfloat16",
+    "grad_dtype": "bfloat16",
+    "act_seq_shard": True,
+    "fsdp_pod": True,
+}

@@ -1,0 +1,38 @@
+"""mistral-large-123b — dense GQA transformer.
+
+[hf:mistralai/Mistral-Large-Instruct-2407; unverified]
+88L d_model=12288 96H (GQA kv=8) d_ff=28672 vocab=32768, head_dim=128.
+
+Pure full attention → ``long_500k`` skipped (DESIGN §3).
+"""
+
+from repro.configs.base import ModelConfig
+
+ARCH_ID = "mistral-large-123b"
+
+FULL = ModelConfig(
+    name=ARCH_ID,
+    family="dense",
+    n_layers=88,
+    d_model=12288,
+    n_heads=96,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=28672,
+    vocab_size=32768,
+    rope_theta=1_000_000.0,
+)
+
+SMOKE = ModelConfig(
+    name=ARCH_ID + "-smoke",
+    family="dense",
+    n_layers=2,
+    d_model=64,
+    n_heads=8,
+    n_kv_heads=2,
+    d_ff=160,
+    vocab_size=256,
+)
+
+# 123B dense: fp32 master fits; seq-shard the remat buffers (DESIGN §4).
+RUN_OVERRIDES = {"act_seq_shard": True, "optimizer_dtype": "bfloat16"}

@@ -1,0 +1,41 @@
+"""musicgen-large — decoder-only transformer over EnCodec tokens.
+
+[arXiv:2306.05284; hf]  48L d_model=2048 32H (MHA kv=32) d_ff=8192
+vocab=2048 (per codebook), 4 EnCodec codebooks with the delay pattern.
+
+Backbone only, per the assignment: the EnCodec frontend is a STUB —
+``input_specs()`` supplies token ids of shape (B, S, n_codebooks); the
+embedding sums the per-codebook tables and the head predicts all 4
+codebooks in parallel (delay-pattern bookkeeping lives in the data stub).
+
+Pure full attention → ``long_500k`` skipped (DESIGN §3).
+"""
+
+from repro.configs.base import ModelConfig
+
+ARCH_ID = "musicgen-large"
+
+FULL = ModelConfig(
+    name=ARCH_ID,
+    family="audio",
+    n_layers=48,
+    d_model=2048,
+    n_heads=32,
+    n_kv_heads=32,
+    d_ff=8192,
+    vocab_size=2048,
+    n_codebooks=4,
+    rope_theta=10_000.0,
+)
+
+SMOKE = ModelConfig(
+    name=ARCH_ID + "-smoke",
+    family="audio",
+    n_layers=2,
+    d_model=64,
+    n_heads=4,
+    n_kv_heads=4,
+    d_ff=128,
+    vocab_size=64,
+    n_codebooks=4,
+)

@@ -1,0 +1,50 @@
+"""qwen3-moe-235b-a22b — MoE, 128 experts top-8.
+
+[hf:Qwen/Qwen3-30B-A3B (family); hf]  94L d_model=4096 64H (GQA kv=4)
+d_ff=1536 (per-expert) vocab=151936, 128 experts top-8, head_dim=128
+(explicit, per the Qwen3 family config).
+
+Every layer is MoE (moe_every=1).  Experts shard over the MODEL axis
+(EP=16 → 8 experts/device); the all-to-all token routing is the
+coherence-traffic analogue of DESIGN §1 Track B.
+"""
+
+from repro.configs.base import ModelConfig
+
+ARCH_ID = "qwen3-moe-235b-a22b"
+
+FULL = ModelConfig(
+    name=ARCH_ID,
+    family="moe",
+    n_layers=94,
+    d_model=4096,
+    n_heads=64,
+    n_kv_heads=4,
+    head_dim=128,
+    d_ff=1536,              # routed-expert FF width
+    d_ff_expert=1536,
+    vocab_size=151936,
+    n_experts=128,
+    experts_per_token=8,
+    moe_every=1,
+    rope_theta=1_000_000.0,
+)
+
+SMOKE = ModelConfig(
+    name=ARCH_ID + "-smoke",
+    capacity_factor=8.0,
+    family="moe",
+    n_layers=2,
+    d_model=64,
+    n_heads=4,
+    n_kv_heads=2,
+    d_ff=96,
+    d_ff_expert=96,
+    vocab_size=256,
+    n_experts=8,
+    experts_per_token=2,
+    moe_every=1,
+)
+
+# 235B MoE: bf16 moments + seq-sharded remat buffers (DESIGN §4).
+RUN_OVERRIDES = {"optimizer_dtype": "bfloat16", "act_seq_shard": True}

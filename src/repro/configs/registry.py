@@ -1,0 +1,109 @@
+"""Architecture registry: ``--arch <id>`` → (FULL config, SMOKE config).
+
+The 10 assigned architectures (DESIGN §3) plus the paper's own workload
+stand-ins.  ``input_specs`` builds the ShapeDtypeStruct stand-ins for every
+(arch × shape) cell — weak-type-correct, shardable, no device allocation —
+used by launch/dryrun.py and benchmarks/roofline.py.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import (deepseek_coder_33b, falcon_mamba_7b, gemma_2b,
+                           llama3_405b, llama32_vision_90b,
+                           llama4_maverick_400b, mistral_large_123b,
+                           musicgen_large, qwen3_moe_235b, zamba2_2p7b)
+from repro.configs.base import SHAPES, ModelConfig, RunConfig, ShapeConfig
+
+_MODULES = (
+    zamba2_2p7b,
+    mistral_large_123b,
+    deepseek_coder_33b,
+    llama3_405b,
+    gemma_2b,
+    qwen3_moe_235b,
+    llama4_maverick_400b,
+    falcon_mamba_7b,
+    llama32_vision_90b,
+    musicgen_large,
+)
+
+ARCHS: Dict[str, ModelConfig] = {m.ARCH_ID: m.FULL for m in _MODULES}
+SMOKES: Dict[str, ModelConfig] = {m.ARCH_ID: m.SMOKE for m in _MODULES}
+RUN_OVERRIDES: Dict[str, Dict] = {
+    m.ARCH_ID: getattr(m, "RUN_OVERRIDES", {}) for m in _MODULES
+}
+
+ARCH_IDS = list(ARCHS)
+
+
+def get_config(arch: str, smoke: bool = False) -> ModelConfig:
+    table = SMOKES if smoke else ARCHS
+    if arch not in table:
+        raise KeyError(f"unknown arch {arch!r}; known: {sorted(table)}")
+    return table[arch]
+
+
+def get_run_config(arch: str, shape: str, **overrides) -> RunConfig:
+    """RunConfig for one (arch × shape) cell, with per-arch defaults."""
+    kw: Dict[str, Any] = dict(RUN_OVERRIDES.get(arch, {}))
+    sc = SHAPES[shape]
+    if sc.kind == "train":
+        # microbatches divide the global batch; global_batch=256 → 16 micro
+        # of 16 (one sample per data shard at data=16).
+        kw.setdefault("microbatches", 16)
+    if sc.seq_len >= 32768:
+        kw.setdefault("seq_shard", True)
+    kw.update(overrides)
+    return RunConfig(**kw)
+
+
+def cell_supported(cfg: ModelConfig, shape: ShapeConfig) -> Tuple[bool, str]:
+    """Is this (arch × shape) cell runnable?  (DESIGN §3 skip rules.)"""
+    if shape.name == "long_500k" and not cfg.sub_quadratic:
+        return False, "long_500k needs sub-quadratic attention (DESIGN §3)"
+    return True, ""
+
+
+# ---------------------------------------------------------------------------
+# input specs (ShapeDtypeStruct stand-ins, no allocation)
+# ---------------------------------------------------------------------------
+def token_shape(cfg: ModelConfig, batch: int, seq: int) -> Tuple[int, ...]:
+    if cfg.family == "audio":
+        return (batch, seq, cfg.n_codebooks)
+    return (batch, seq)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig,
+                ) -> Dict[str, jax.ShapeDtypeStruct]:
+    """Abstract inputs for the step function selected by ``shape.kind``.
+
+    train  → {tokens, labels}            (the full global batch)
+    prefill→ {tokens}                    (the request batch)
+    decode → {tokens (B,1[,nq]), ...}    (one new token; cache built inside)
+    """
+    B, S = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    if shape.kind == "train":
+        specs = {
+            "tokens": jax.ShapeDtypeStruct(token_shape(cfg, B, S), i32),
+            "labels": jax.ShapeDtypeStruct(token_shape(cfg, B, S), i32),
+        }
+        if cfg.family == "vlm":
+            specs["img_embed"] = jax.ShapeDtypeStruct(
+                (B, cfg.n_img_tokens, cfg.d_model), jnp.bfloat16)
+        return specs
+    if shape.kind == "prefill":
+        specs = {"tokens": jax.ShapeDtypeStruct(token_shape(cfg, B, S), i32)}
+        if cfg.family == "vlm":
+            specs["img_embed"] = jax.ShapeDtypeStruct(
+                (B, cfg.n_img_tokens, cfg.d_model), jnp.bfloat16)
+        return specs
+    # decode: one new token against a cache of length S (cache specs are
+    # produced by serve.state_specs, not here)
+    return {"tokens": jax.ShapeDtypeStruct(token_shape(cfg, B, 1), i32)}

@@ -1,0 +1,43 @@
+"""zamba2-2.7b — hybrid Mamba2 + shared attention blocks.
+
+[arXiv:2411.15242; hf]  54L d_model=2560 32H (GQA kv=32) d_ff=10240
+vocab=32000, ssm_state=64.  Mamba2 backbone with ONE shared transformer
+block applied every 6 layers (9 application sites) with per-site LoRA on
+the Q projection and a concat-skip from the embedding stream (DESIGN §5.4).
+
+Sub-quadratic family: runs the ``long_500k`` cell (SSM state is O(1) in
+context; the shared block attends with an O(S)-per-token cache).
+"""
+
+from repro.configs.base import ModelConfig
+
+ARCH_ID = "zamba2-2.7b"
+
+FULL = ModelConfig(
+    name=ARCH_ID,
+    family="hybrid",
+    n_layers=54,
+    d_model=2560,
+    n_heads=32,
+    n_kv_heads=32,
+    d_ff=10240,
+    vocab_size=32000,
+    ssm_version=2,
+    ssm_state=64,
+    shared_attn_every=6,       # 54 = 9 units x 6 Mamba2 layers
+)
+
+SMOKE = ModelConfig(
+    name=ARCH_ID + "-smoke",
+    family="hybrid",
+    n_layers=4,
+    d_model=64,
+    n_heads=4,
+    n_kv_heads=4,
+    d_ff=128,
+    vocab_size=256,
+    ssm_version=2,
+    ssm_state=16,
+    ssm_chunk=16,
+    shared_attn_every=2,
+)

@@ -1,0 +1,11 @@
+"""HERMES Track-A core: the paper's memory hierarchy, reproduced.
+
+Submodules: params, cache, tensor_cache, coherence, prefetch,
+hybrid_memory, trace, simulator, energy, presets, calibration.
+"""
+
+from repro.core.params import (CacheParams, HybridMemParams,  # noqa: F401
+                               MemChannelParams, PrefetchParams, SystemParams)
+from repro.core.presets import (BASELINE, CONFIGS, PAPER_TABLE,  # noqa: F401
+                                PREFETCH, SHARED_L3, TENSOR_AWARE)
+from repro.core.simulator import HierarchySim, Metrics, simulate  # noqa: F401

@@ -1,0 +1,77 @@
+"""Calibration harness: run the paper suite and compare against Tables I-III.
+
+Constants calibrated here (then frozen):
+  * simulator.MLP (outstanding misses per requestor)
+  * DRAM/HBM channel latency + bandwidth (simulator.DRAM_CHANNEL/HBM_CHANNEL)
+  * EnergyModel.UJ_PER_OP_SCALE
+
+Methodology: constants were tuned ONCE so that the *baseline* row lands on
+the paper's baseline (120 ns, 25 GB/s, 60 %, 50 µJ/op); the three HERMES
+rows are then pure predictions of the model — they are NOT individually
+calibrated.  ``run_suite`` aggregates the three workloads (CNN/RNN/
+Transformer) by the paper's implied equal weighting (arithmetic mean).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List
+
+import numpy as np
+
+from repro.core import trace as trace_mod
+from repro.core.presets import CONFIGS, PAPER_TABLE
+from repro.core.simulator import Metrics, simulate
+
+
+def run_suite(scale: float = 1.0, configs=None) -> Dict[str, Dict]:
+    """Returns {config_name: {metric: suite-mean, 'per_workload': [...]}}"""
+    configs = configs if configs is not None else CONFIGS
+    traces = trace_mod.suite(scale)
+    out: Dict[str, Dict] = {}
+    for sp in configs:
+        rows: List[Metrics] = [simulate(sp, t) for t in traces]
+        out[sp.name] = {
+            "latency_ns": float(np.mean([r.avg_latency_ns for r in rows])),
+            "bandwidth_gbps": float(np.mean([r.bandwidth_gbps for r in rows])),
+            "hit_rate": float(np.mean([r.hit_rate for r in rows])),
+            "energy_uj": float(np.mean([r.energy_uj_per_op for r in rows])),
+            "per_workload": [r.row() for r in rows],
+        }
+    return out
+
+
+def compare_to_paper(results: Dict[str, Dict]) -> List[Dict]:
+    """Per (config, metric): simulated vs published + relative error."""
+    rows = []
+    for cfg, paper in PAPER_TABLE.items():
+        if cfg not in results:
+            continue
+        sim = results[cfg]
+        for metric, pub in paper.items():
+            got = sim[metric]
+            rows.append({
+                "config": cfg, "metric": metric,
+                "paper": pub, "simulated": round(got, 3),
+                "rel_err": round((got - pub) / pub, 3),
+            })
+    return rows
+
+
+def trend_ok(results: Dict[str, Dict]) -> bool:
+    """The paper's qualitative claims: each technique strictly improves
+    latency / bandwidth / hit-rate / energy over the previous row."""
+    order = ["baseline", "shared_l3", "prefetch", "tensor_aware"]
+    for a, b in zip(order, order[1:]):
+        if not (results[b]["latency_ns"] < results[a]["latency_ns"]
+                and results[b]["bandwidth_gbps"] > results[a]["bandwidth_gbps"]
+                and results[b]["hit_rate"] > results[a]["hit_rate"]
+                and results[b]["energy_uj"] < results[a]["energy_uj"]):
+            return False
+    return True
+
+
+if __name__ == "__main__":
+    res = run_suite(scale=1.0)
+    for row in compare_to_paper(res):
+        print(row)
+    print("monotone trend:", trend_ok(res))

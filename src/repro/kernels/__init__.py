@@ -1,0 +1,17 @@
+"""Pallas TPU kernels for the HERMES-adapted compute hot-spots.
+
+Each kernel is a triple: ``<name>.py`` (pl.pallas_call + BlockSpec),
+an entry in ``ops.py`` (jit'd wrapper that picks interpret mode off-TPU)
+and ``ref.py`` (pure-jnp oracle).  DESIGN §1 Track B maps each kernel to
+the HERMES technique it realizes:
+
+  matmul_prefetch — the Pallas grid pipeline IS the stride prefetcher:
+      next (M,K)/(K,N) tiles are DMA'd into VMEM while the MXU consumes
+      the current ones; the accumulator tile is the pinned resident.
+  flash_attention — tensor-aware caching: Q tile pinned in VMEM, KV
+      streamed past it with an online softmax.
+  paged_attention — the KV page table is scalar-prefetched (HERMES's
+      "ML-based prefetching": page indices known one step ahead).
+  mamba_scan      — the O(1) SSM state pinned in VMEM scratch across the
+      chunk grid (the highest-reuse tensor in the model).
+"""

@@ -1,0 +1,96 @@
+"""Causal flash attention forward (Pallas TPU).
+
+Tensor-aware caching realized in VMEM (DESIGN §1): the (bq × d) Q tile
+and the f32 (m, l, acc) softmax state stay PINNED in VMEM scratch while
+the KV stream is tiled past them by the grid pipeline (which prefetches
+the next KV tile during the current tile's compute — the stride
+prefetcher).  One grid step = one (q_tile, kv_tile) pair; the kv grid
+dim is innermost so the scratch state carries across it.
+
+Layout: q (B, H, S, D), k/v (B, H, T, D) — heads flattened into the
+leading grid dim.  GQA is handled by the ops.py wrapper (q reshaped to
+kv-head groups).  The training path uses models/flash.py (scan-based,
+differentiable); this kernel is the serving/prefill fast path and is
+validated against the same oracle.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+                  *, n_kv: int, bq: int, bkv: int, scale: float,
+                  causal: bool):
+    qi = pl.program_id(1)
+    kj = pl.program_id(2)
+
+    @pl.when(kj == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, _NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    run = (not causal) or (kj * bkv <= qi * bq + bq - 1)
+
+    @pl.when(run)
+    def _tile():
+        q = q_ref[0].astype(jnp.float32) * scale        # (bq, d)
+        k = k_ref[0].astype(jnp.float32)                # (bkv, d)
+        v = v_ref[0].astype(jnp.float32)
+        s = q @ k.T                                     # (bq, bkv)
+        if causal:
+            qpos = qi * bq + jax.lax.broadcasted_iota(jnp.int32,
+                                                      (bq, bkv), 0)
+            kpos = kj * bkv + jax.lax.broadcasted_iota(jnp.int32,
+                                                       (bq, bkv), 1)
+            s = jnp.where(kpos <= qpos, s, _NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(-1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + p.sum(-1)
+        acc_ref[...] = acc_ref[...] * corr[:, None] + p @ v
+        m_ref[...] = m_new
+
+    @pl.when(kj == n_kv - 1)
+    def _done():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention_fwd(q: jax.Array, k: jax.Array, v: jax.Array,
+                        causal: bool = True, bq: int = 512, bkv: int = 512,
+                        interpret: bool = False) -> jax.Array:
+    """q (BH, S, D), k/v (BH, T, D) → (BH, S, D)."""
+    BH, S, D = q.shape
+    T = k.shape[1]
+    bq, bkv = min(bq, S), min(bkv, T)
+    assert S % bq == 0 and T % bkv == 0, (S, T, bq, bkv)
+    n_kv = T // bkv
+    grid = (BH, S // bq, n_kv)
+    return pl.pallas_call(
+        functools.partial(_flash_kernel, n_kv=n_kv, bq=bq, bkv=bkv,
+                          scale=D ** -0.5, causal=causal),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, D), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, bkv, D), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, bkv, D), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, D), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, S, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,74 @@
+"""Chunked Mamba1 selective scan with the SSM state pinned in VMEM.
+
+The HERMES insight applied to the attention-free family (DESIGN §3):
+the O(1) recurrent state h (bd × N per channel block) is the single
+highest-reuse tensor in an SSM — it is touched every timestep while the
+sequence streams by exactly once.  The kernel keeps h in VMEM scratch
+across the chunk grid dimension (never spilled to HBM between chunks),
+while the grid pipeline prefetches the next chunk's (a, bx, C) tiles —
+streaming tensors in HERMES's classification.
+
+Inputs are the pre-computed per-step decay and drive terms:
+    a  (B, L, bd_total, N)   : exp(dt · A)      — decay
+    bx (B, L, bd_total, N)   : dt · x · B_t     — drive
+    C  (B, L, N)             : output projection per step
+Output: y (B, L, bd_total) = Σ_n h[t, d, n] · C[t, n].
+
+Grid: (B, bd_total / bd, L / chunk) — chunk innermost so the h scratch
+carries across it.  Within a chunk the recurrence is a fori_loop over
+timesteps on VMEM-resident tiles (sequential in t, parallel over d×N
+lanes — the VPU-friendly formulation of the diagonal scan).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _mamba_kernel(a_ref, bx_ref, c_ref, y_ref, h_ref,
+                  *, chunk: int):
+    cj = pl.program_id(2)
+
+    @pl.when(cj == 0)
+    def _init():
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    def step(t, h):
+        a_t = a_ref[0, t].astype(jnp.float32)        # (bd, N)
+        bx_t = bx_ref[0, t].astype(jnp.float32)
+        h = a_t * h + bx_t
+        c_t = c_ref[0, t].astype(jnp.float32)        # (N,)
+        y_ref[0, t] = (h @ c_t).astype(y_ref.dtype)  # (bd,)
+        return h
+
+    h = jax.lax.fori_loop(0, chunk, step, h_ref[...])
+    h_ref[...] = h
+
+
+def mamba_scan(a: jax.Array, bx: jax.Array, c: jax.Array,
+               bd: int = 256, chunk: int = 128,
+               interpret: bool = False) -> jax.Array:
+    """Diagonal selective scan.  a/bx (B, L, Dn, N), c (B, L, N)."""
+    B, L, Dn, N = a.shape
+    bd = min(bd, Dn)
+    chunk = min(chunk, L)
+    assert Dn % bd == 0 and L % chunk == 0, (Dn, L, bd, chunk)
+    grid = (B, Dn // bd, L // chunk)
+    return pl.pallas_call(
+        functools.partial(_mamba_kernel, chunk=chunk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, chunk, bd, N), lambda b, d, c_: (b, c_, d, 0)),
+            pl.BlockSpec((1, chunk, bd, N), lambda b, d, c_: (b, c_, d, 0)),
+            pl.BlockSpec((1, chunk, N), lambda b, d, c_: (b, c_, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, chunk, bd), lambda b, d, c_: (b, c_, d)),
+        out_shape=jax.ShapeDtypeStruct((B, L, Dn), a.dtype),
+        scratch_shapes=[pltpu.VMEM((bd, N), jnp.float32)],
+        interpret=interpret,
+    )(a, bx, c)

@@ -1,0 +1,112 @@
+"""Paged decode attention with scalar-prefetched page tables (Pallas TPU).
+
+HERMES's "ML-based prefetching" analogue (DESIGN §1): the page table —
+which physical KV page each (sequence, logical-page) maps to — is passed
+through ``pltpu.PrefetchScalarGridSpec``, so the DMA engine knows the
+NEXT page's physical address one grid step ahead and fetches it into
+VMEM while the current page is being scored.  Random page placement
+(the whole point of a paged cache) thus costs nothing: prefetch hides
+the gather latency exactly like the paper's predictor hides DRAM
+latency.
+
+Layout: one query vector per sequence (decode), KV pool paged:
+  q          (B, H, D)
+  k/v pool   (n_pages, page, Hkv, D)
+  page_tbl   (B, max_pages) int32   — physical page per logical slot
+  seq_lens   (B,) int32
+
+Grid: (B, max_pages); the (m, l, acc) state is pinned in VMEM scratch
+across the page dimension (tensor-aware caching of the reduction state).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_NEG_INF = -1e30
+
+
+def _paged_kernel(page_tbl, seq_lens,              # scalar-prefetch refs
+                  q_ref, k_ref, v_ref, o_ref,
+                  m_ref, l_ref, acc_ref,
+                  *, page: int, n_pages_max: int, scale: float):
+    b = pl.program_id(0)
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, _NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    seq_len = seq_lens[b]
+    in_range = j * page < seq_len
+
+    @pl.when(in_range)
+    def _tile():
+        q = q_ref[0].astype(jnp.float32) * scale         # (H, D)
+        k = k_ref[0].astype(jnp.float32)                 # (page, Hkv, D)
+        v = v_ref[0].astype(jnp.float32)
+        H = q.shape[0]
+        Hkv = k.shape[1]
+        g = H // Hkv
+        qg = q.reshape(Hkv, g, -1)
+        s = jnp.einsum("hgd,phd->hgp", qg, k)            # (Hkv, g, page)
+        kpos = j * page + jax.lax.broadcasted_iota(
+            jnp.int32, s.shape, 2)
+        s = jnp.where(kpos < seq_len, s, _NEG_INF)
+        m_prev = m_ref[...]                              # (Hkv, g)
+        m_new = jnp.maximum(m_prev, s.max(-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + p.sum(-1)
+        acc_ref[...] = (acc_ref[...] * corr[..., None]
+                        + jnp.einsum("hgp,phd->hgd", p, v))
+        m_ref[...] = m_new
+
+    @pl.when(j == n_pages_max - 1)
+    def _done():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        out = acc_ref[...] / l[..., None]                # (Hkv, g, D)
+        o_ref[0] = out.reshape(o_ref.shape[1:]).astype(o_ref.dtype)
+
+
+def paged_attention(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
+                    page_tbl: jax.Array, seq_lens: jax.Array,
+                    interpret: bool = False) -> jax.Array:
+    """q (B,H,D); pools (P, page, Hkv, D); page_tbl (B, max_pages)."""
+    B, H, D = q.shape
+    n_pool, page, Hkv, _ = k_pool.shape
+    max_pages = page_tbl.shape[1]
+    grid = (B, max_pages)
+
+    def _page_map(b, j, page_tbl, seq_lens):
+        return (page_tbl[b, j], 0, 0, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, H, D), lambda b, j, *_: (b, 0, 0)),
+            pl.BlockSpec((1, page, Hkv, D), _page_map),
+            pl.BlockSpec((1, page, Hkv, D), _page_map),
+        ],
+        out_specs=pl.BlockSpec((1, H, D), lambda b, j, *_: (b, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((Hkv, H // Hkv), jnp.float32),
+            pltpu.VMEM((Hkv, H // Hkv), jnp.float32),
+            pltpu.VMEM((Hkv, H // Hkv, D), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(_paged_kernel, page=page, n_pages_max=max_pages,
+                          scale=D ** -0.5),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, H, D), q.dtype),
+        interpret=interpret,
+    )(page_tbl, seq_lens, q, k_pool, v_pool)

@@ -1,0 +1,70 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness contracts).
+
+Tests sweep shapes/dtypes and assert_allclose kernel-vs-oracle with
+interpret=True on CPU (the kernel body executes in Python, so the same
+tiling/masking logic is exercised without TPU hardware).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+_NEG_INF = -1e30
+
+
+def matmul_ref(a: jax.Array, b: jax.Array) -> jax.Array:
+    return jnp.dot(a.astype(jnp.float32),
+                   b.astype(jnp.float32)).astype(a.dtype)
+
+
+def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                        causal: bool = True) -> jax.Array:
+    """q (BH, S, D), k/v (BH, T, D)."""
+    BH, S, D = q.shape
+    T = k.shape[1]
+    s = jnp.einsum("bsd,btd->bst", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * (D ** -0.5)
+    if causal:
+        mask = jnp.arange(T)[None, :] <= jnp.arange(S)[:, None]
+        s = jnp.where(mask[None], s, _NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bst,btd->bsd", p,
+                      v.astype(jnp.float32)).astype(q.dtype)
+
+
+def paged_attention_ref(q, k_pool, v_pool, page_tbl, seq_lens):
+    """Gather pages densely, then plain masked attention."""
+    B, H, D = q.shape
+    n_pool, page, Hkv, _ = k_pool.shape
+    max_pages = page_tbl.shape[1]
+    T = max_pages * page
+    g = H // Hkv
+    k = k_pool[page_tbl].reshape(B, T, Hkv, D)       # (B,T,Hkv,D)
+    v = v_pool[page_tbl].reshape(B, T, Hkv, D)
+    qg = q.reshape(B, Hkv, g, D).astype(jnp.float32)
+    s = jnp.einsum("bhgd,bthd->bhgt", qg,
+                   k.astype(jnp.float32)) * (D ** -0.5)
+    mask = jnp.arange(T)[None, :] < seq_lens[:, None]
+    s = jnp.where(mask[:, None, None, :], s, _NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgt,bthd->bhgd", p, v.astype(jnp.float32))
+    return out.reshape(B, H, D).astype(q.dtype)
+
+
+def mamba_scan_ref(a, bx, c):
+    """h_t = a_t ⊙ h_{t-1} + bx_t;  y_t = h_t · c_t."""
+    B, L, Dn, N = a.shape
+
+    def step(h, xs):
+        a_t, bx_t, c_t = xs
+        h = a_t * h + bx_t                            # (B, Dn, N)
+        y = jnp.einsum("bdn,bn->bd", h, c_t)
+        return h, y
+
+    h0 = jnp.zeros((B, Dn, N), jnp.float32)
+    xs = (a.swapaxes(0, 1).astype(jnp.float32),
+          bx.swapaxes(0, 1).astype(jnp.float32),
+          c.swapaxes(0, 1).astype(jnp.float32))
+    _, ys = jax.lax.scan(step, h0, xs)
+    return ys.swapaxes(0, 1).astype(a.dtype)          # (B, L, Dn)

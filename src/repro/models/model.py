@@ -1,0 +1,516 @@
+"""Unified model assembly for all assigned architecture families.
+
+``init_params`` / ``forward`` dispatch on ``cfg.family``:
+
+  dense   — N × (attn + gated MLP)                       (mistral, deepseek,
+            llama3, gemma; musicgen/audio reuses this backbone)
+  moe     — attn + MoE FFN every ``moe_every``-th layer  (qwen3, llama4)
+  ssm     — N × Mamba1                                    (falcon-mamba)
+  hybrid  — Mamba2 stack + ONE shared attention block applied every
+            ``shared_attn_every`` layers with per-site LoRA (zamba2)
+  vlm     — dense + cross-attention image layers every
+            ``cross_attn_every``-th layer                 (llama-3.2-vision)
+  audio   — dense backbone over summed codebook embeddings with
+            ``n_codebooks`` output heads                  (musicgen)
+
+Layers are grouped into REPEATING UNITS and scanned with ``lax.scan`` so
+the lowered HLO is O(1) in depth (essential for 126-layer dry-runs on one
+CPU).  ``jax.checkpoint`` wraps each unit per the remat policy.
+
+Caches: a plain dict (pytree) holding per-unit stacked decode state —
+dense KV (``layers.KVCache``), SSM state (``ssm.SSMCache``), the hybrid
+shared-block KV, and precomputed cross-attention image KV for the VLM.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, RunConfig
+from repro.models import layers as L
+from repro.models import moe as M
+from repro.models import ssm as S
+from repro.models.layers import DATA, MODEL, constrain
+
+
+# ---------------------------------------------------------------------------
+# unit structure per family
+# ---------------------------------------------------------------------------
+def unit_layout(cfg: ModelConfig) -> Tuple[int, int]:
+    """Returns (n_units, layers_per_unit)."""
+    if cfg.family == "hybrid":
+        per = cfg.shared_attn_every or cfg.n_layers
+    elif cfg.family == "vlm":
+        per = cfg.cross_attn_every
+    elif cfg.family == "moe":
+        per = cfg.moe_every
+    else:
+        per = 1
+    assert cfg.n_layers % per == 0, (cfg.n_layers, per)
+    return cfg.n_layers // per, per
+
+
+def _stack_init(key, n: int, init_fn):
+    """Init n copies of a sub-tree and stack leaves on axis 0."""
+    keys = jax.random.split(key, n)
+    trees = [init_fn(k) for k in keys]
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+
+
+# ---------------------------------------------------------------------------
+# per-family unit init
+# ---------------------------------------------------------------------------
+def _init_dense_layer(key, cfg: ModelConfig, dtype):
+    ks = jax.random.split(key, 4)
+    return {
+        "ln1": L.init_rmsnorm(cfg.d_model, dtype),
+        "attn": L.init_attention(ks[0], cfg, dtype),
+        "ln2": L.init_rmsnorm(cfg.d_model, dtype),
+        "mlp": L.init_mlp(ks[1], cfg.d_model, cfg.d_ff, dtype),
+    }
+
+
+def _init_moe_layer(key, cfg: ModelConfig, dtype):
+    ks = jax.random.split(key, 2)
+    return {
+        "ln1": L.init_rmsnorm(cfg.d_model, dtype),
+        "attn": L.init_attention(ks[0], cfg, dtype),
+        "ln2": L.init_rmsnorm(cfg.d_model, dtype),
+        "moe": M.init_moe(ks[1], cfg, dtype),
+    }
+
+
+def _init_ssm_layer(key, cfg: ModelConfig, dtype):
+    init = S.init_mamba1 if cfg.ssm_version == 1 else S.init_mamba2
+    return {"ln": L.init_rmsnorm(cfg.d_model, dtype),
+            "mixer": init(key, cfg, dtype)}
+
+
+def _init_cross_layer(key, cfg: ModelConfig, dtype):
+    ks = jax.random.split(key, 2)
+    return {
+        "ln1": L.init_rmsnorm(cfg.d_model, dtype),
+        "attn": L.init_attention(ks[0], cfg, dtype, cross=True),
+        "gate": jnp.zeros((1,), dtype),          # tanh-gated cross-attn
+        "ln2": L.init_rmsnorm(cfg.d_model, dtype),
+        "mlp": L.init_mlp(ks[1], cfg.d_model, cfg.d_ff, dtype),
+    }
+
+
+def _init_shared_block(key, cfg: ModelConfig, dtype):
+    """Zamba2 shared attention+MLP block (input = concat(x, x_emb))."""
+    ks = jax.random.split(key, 3)
+    d = cfg.d_model
+    return {
+        "pre": L._dense_init(ks[0], 2 * d, (2 * d, d), dtype),
+        "ln1": L.init_rmsnorm(d, dtype),
+        "attn": L.init_attention(ks[1], cfg, dtype),
+        "ln2": L.init_rmsnorm(d, dtype),
+        "mlp": L.init_mlp(ks[2], d, cfg.d_ff, dtype),
+    }
+
+
+def _init_lora(key, cfg: ModelConfig, dtype, rank: int = 64):
+    d, qd = cfg.d_model, cfg.n_heads * cfg.head_dim
+    ks = jax.random.split(key, 2)
+    return {"a": L._dense_init(ks[0], d, (d, rank), dtype),
+            "b": jnp.zeros((rank, qd), dtype)}
+
+
+# ---------------------------------------------------------------------------
+# init_params
+# ---------------------------------------------------------------------------
+def init_params(cfg: ModelConfig, key, dtype=jnp.float32) -> Dict[str, Any]:
+    n_units, per = unit_layout(cfg)
+    k_embed, k_blocks, k_extra, k_head = jax.random.split(key, 4)
+    params: Dict[str, Any] = {"final_norm": L.init_rmsnorm(cfg.d_model, dtype)}
+
+    if cfg.family == "audio":
+        keys = jax.random.split(k_embed, cfg.n_codebooks)
+        params["embed"] = {"table": jnp.stack(
+            [L.init_embedding(k, cfg.vocab_size, cfg.d_model, dtype)["table"]
+             for k in keys])}                      # (nq, V, D)
+        params["heads"] = L._dense_init(
+            k_head, cfg.d_model, (cfg.n_codebooks, cfg.d_model,
+                                  cfg.vocab_size), dtype)
+    else:
+        params["embed"] = L.init_embedding(k_embed, cfg.vocab_size,
+                                           cfg.d_model, dtype)
+
+    fam = cfg.family
+    if fam in ("dense", "audio"):
+        params["blocks"] = _stack_init(
+            k_blocks, n_units, lambda k: _init_dense_layer(k, cfg, dtype))
+    elif fam == "moe":
+        if cfg.moe_every == 1:
+            params["blocks"] = _stack_init(
+                k_blocks, n_units, lambda k: _init_moe_layer(k, cfg, dtype))
+        else:
+            k1, k2 = jax.random.split(k_blocks)
+            params["blocks"] = {
+                "dense": _stack_init(
+                    k1, n_units, lambda k: _init_dense_layer(k, cfg, dtype)),
+                "moe": _stack_init(
+                    k2, n_units, lambda k: _init_moe_layer(k, cfg, dtype)),
+            }
+    elif fam == "ssm":
+        params["blocks"] = _stack_init(
+            k_blocks, n_units, lambda k: _init_ssm_layer(k, cfg, dtype))
+    elif fam == "hybrid":
+        def unit(k):
+            return _stack_init(k, per, lambda kk: _init_ssm_layer(kk, cfg, dtype))
+        params["blocks"] = _stack_init(k_blocks, n_units, unit)
+        params["shared"] = _init_shared_block(k_extra, cfg, dtype)
+        params["lora"] = _stack_init(
+            k_extra, n_units, lambda k: _init_lora(k, cfg, dtype))
+    elif fam == "vlm":
+        k1, k2 = jax.random.split(k_blocks)
+        params["blocks"] = {
+            "self": _stack_init(
+                k1, n_units,
+                lambda k: _stack_init(k, per - 1,
+                                      lambda kk: _init_dense_layer(kk, cfg, dtype))),
+            "cross": _stack_init(
+                k2, n_units, lambda k: _init_cross_layer(k, cfg, dtype)),
+        }
+    else:
+        raise ValueError(f"unknown family {fam}")
+    return params
+
+
+# ---------------------------------------------------------------------------
+# caches
+# ---------------------------------------------------------------------------
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int,
+               dtype=jnp.bfloat16, img_tokens: int = 0) -> Dict[str, Any]:
+    n_units, per = unit_layout(cfg)
+
+    def stack(tree, n):
+        return jax.tree.map(lambda x: jnp.broadcast_to(
+            x, (n,) + x.shape).copy(), tree)
+
+    cache: Dict[str, Any] = {}
+    fam = cfg.family
+    if fam in ("dense", "audio", "moe"):
+        kv = L.KVCache.zeros(batch, max_seq, cfg.n_kv_heads, cfg.head_dim,
+                             dtype)
+        cache["kv"] = stack(kv, n_units * per) if per > 1 else stack(kv, n_units)
+        # reshape stacked axis into (n_units, per) for scan
+        if per > 1:
+            cache["kv"] = jax.tree.map(
+                lambda x: x.reshape((n_units, per) + x.shape[1:]), cache["kv"])
+    elif fam == "ssm":
+        cache["ssm"] = stack(S.init_ssm_cache(cfg, batch, dtype), n_units)
+    elif fam == "hybrid":
+        inner = stack(S.init_ssm_cache(cfg, batch, dtype), per)
+        cache["ssm"] = stack(inner, n_units)
+        cache["shared_kv"] = stack(
+            L.KVCache.zeros(batch, max_seq, cfg.n_kv_heads, cfg.head_dim,
+                            dtype), n_units)
+    elif fam == "vlm":
+        kv = L.KVCache.zeros(batch, max_seq, cfg.n_kv_heads, cfg.head_dim,
+                             dtype)
+        cache["kv"] = jax.tree.map(
+            lambda x: jnp.broadcast_to(
+                x, (n_units, per - 1) + x.shape).copy(), kv)
+        nit = img_tokens or cfg.n_img_tokens
+        cache["cross_kv"] = {
+            "k": jnp.zeros((n_units, batch, nit, cfg.n_kv_heads,
+                            cfg.head_dim), dtype),
+            "v": jnp.zeros((n_units, batch, nit, cfg.n_kv_heads,
+                            cfg.head_dim), dtype),
+        }
+    return cache
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+def _dense_layer(p, x, cfg, positions, kv):
+    h, new_kv = L.attention(p["attn"], L.rms_norm(p["ln1"], x, cfg.norm_eps),
+                            cfg, positions, kv_cache=kv)
+    x = x + h
+    x = x + L.mlp(p["mlp"], L.rms_norm(p["ln2"], x, cfg.norm_eps), cfg.act)
+    return x, new_kv
+
+
+def _moe_layer(p, x, cfg, positions, kv):
+    h, new_kv = L.attention(p["attn"], L.rms_norm(p["ln1"], x, cfg.norm_eps),
+                            cfg, positions, kv_cache=kv)
+    x = x + h
+    out, aux, drop = M.moe_ffn(p["moe"], L.rms_norm(p["ln2"], x, cfg.norm_eps),
+                               cfg, cfg.act)
+    return x + out, new_kv, aux, drop
+
+
+def _ssm_layer(p, x, cfg, cache):
+    mixer = S.mamba1 if cfg.ssm_version == 1 else S.mamba2
+    h, new_cache = mixer(p["mixer"], L.rms_norm(p["ln"], x, cfg.norm_eps),
+                         cfg, cache=cache)
+    return x + h, new_cache
+
+
+def _shared_block(p, lora, x, x0, cfg, positions, kv):
+    """Zamba2 shared attn block with per-site LoRA on the Q projection."""
+    inp = jnp.concatenate([x, x0], axis=-1) @ p["pre"].astype(x.dtype)
+    h = L.rms_norm(p["ln1"], inp, cfg.norm_eps)
+    attn_p = dict(p["attn"])
+    attn_p["wq"] = attn_p["wq"] + (lora["a"] @ lora["b"]).astype(attn_p["wq"].dtype)
+    a, new_kv = L.attention(attn_p, h, cfg, positions, kv_cache=kv)
+    h = inp + a
+    h = h + L.mlp(p["mlp"], L.rms_norm(p["ln2"], h, cfg.norm_eps), cfg.act)
+    return x + h, new_kv
+
+
+def _remat(fn, rc: RunConfig):
+    if rc.remat == "none":
+        return fn
+    policy = (jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+              if rc.remat == "dots" else None)
+    return jax.checkpoint(fn, policy=policy)
+
+
+def _seq_shard_body(body, rc: RunConfig, enabled: bool):
+    """Scan-boundary hygiene for the saved residual stream.
+
+    1. ``optimization_barrier`` on the carry at body entry.  Without it,
+       XLA's loop-invariant code motion hoists the f32 upcast of the
+       *entire stacked remat buffer* out of the backward loop (measured:
+       a 31.5 GiB f32[126,1,4096,16384] temp on llama3-405b — the convert
+       feeding rms_norm, vectorized over all 126 saved carries).  The
+       barrier keeps the upcast per-iteration, where it is transient.
+
+    2. HERMES memory-tier trick for the remat buffers (DESIGN §4): when
+       ``rc.act_seq_shard``, the residual saved at every scan step is
+       resharded so its SEQUENCE dim lives on the MODEL axis — 16× less
+       HBM for saved activations, for one all-gather (in) + one
+       slice-reshard (out) per layer.  The gather happens immediately
+       inside the body (and inside the remat region), so compute still
+       sees the full sequence.
+    """
+
+    def wrapped(carry, xs):
+        # With sequence parallelism the gather happens INSIDE
+        # attention/mlp (layers.SEQ_PARALLEL), so the carry stays
+        # seq-sharded through norms and residual adds; without it the
+        # body sees the full sequence immediately.
+        gather_entry = enabled and not L.SEQ_PARALLEL
+        if isinstance(carry, tuple):
+            h = jax.lax.optimization_barrier(carry[0])
+            if gather_entry:
+                h = constrain(h, DATA, None, None)
+            carry = (h,) + carry[1:]
+        else:
+            h = jax.lax.optimization_barrier(carry)
+            if gather_entry:
+                h = constrain(h, DATA, None, None)
+            carry = h
+        out_carry, ys = body(carry, xs)
+        if enabled:
+            if isinstance(out_carry, tuple):
+                h = constrain(out_carry[0], DATA, MODEL, None)
+                out_carry = (h,) + out_carry[1:]
+            else:
+                out_carry = constrain(out_carry, DATA, MODEL, None)
+        return out_carry, ys
+
+    return wrapped
+
+
+def forward(params, cfg: ModelConfig, rc: RunConfig, tokens: jax.Array,
+            positions: Optional[jax.Array] = None,
+            cache: Optional[Dict[str, Any]] = None,
+            img_embed: Optional[jax.Array] = None,
+            ) -> Tuple[jax.Array, Optional[Dict[str, Any]],
+                       Dict[str, jax.Array]]:
+    """tokens: (B, S) int32 — or (B, S, n_codebooks) for audio.
+
+    Returns (logits, new_cache, metrics).  For audio, logits is
+    (B, S, n_codebooks, V).
+    """
+    fam = cfg.family
+    cdt = jnp.dtype(rc.compute_dtype)
+    if fam == "audio":
+        x = jnp.take(params["embed"]["table"][0], tokens[..., 0], axis=0)
+        for q in range(1, cfg.n_codebooks):
+            x = x + jnp.take(params["embed"]["table"][q], tokens[..., q],
+                             axis=0)
+    else:
+        x = L.embed(params["embed"], tokens)
+    x = x.astype(cdt)
+    x = constrain(x, DATA, None, None)
+    B, Sq = x.shape[0], x.shape[1]
+    if positions is None:
+        if cache is not None and fam in ("dense", "audio", "moe", "vlm"):
+            base = _cache_length(cache, fam)
+            positions = base[:, None] + jnp.arange(Sq)[None]
+        elif cache is not None and fam == "hybrid":
+            base = cache["shared_kv"].length[0]          # (B,)
+            positions = base[:, None] + jnp.arange(Sq)[None]
+        else:
+            positions = jnp.broadcast_to(jnp.arange(Sq)[None], (B, Sq))
+
+    metrics: Dict[str, jax.Array] = {}
+    aux_total = jnp.zeros((), jnp.float32)
+    drop_total = jnp.zeros((), jnp.float32)
+    n_units, per = unit_layout(cfg)
+    use_cache = cache is not None
+    # seq-shard the inter-layer residuals (remat buffers) — training only
+    seq_sh = rc.act_seq_shard and cache is None and Sq >= 1024
+    # Megatron-SP inside attention/mlp: dense-ish families only (the MoE
+    # dispatch sorts over the sequence dim, which must stay gathered)
+    L.SEQ_PARALLEL = (seq_sh and rc.seq_parallel
+                      and fam in ("dense", "audio", "vlm"))
+    if seq_sh:
+        x = constrain(x, DATA, MODEL, None)
+
+    if fam in ("dense", "audio"):
+        def body(carry, xs):
+            h = carry
+            p, kv = xs
+            h, new_kv = _dense_layer(p, h, cfg, positions,
+                                     kv if use_cache else None)
+            return h, new_kv
+        kvs = cache["kv"] if use_cache else _dummy(n_units)
+        x, new_kvs = jax.lax.scan(_remat(_seq_shard_body(body, rc, seq_sh), rc), x,
+                                  (params["blocks"], kvs))
+        new_cache = {"kv": new_kvs} if use_cache else None
+
+    elif fam == "moe":
+        if cfg.moe_every == 1:
+            def body(carry, xs):
+                h, aux, drop = carry
+                p, kv = xs
+                h, new_kv, a, d = _moe_layer(p, h, cfg, positions,
+                                             kv if use_cache else None)
+                return (h, aux + a, drop + d), new_kv
+            kvs = cache["kv"] if use_cache else _dummy(n_units)
+            (x, aux_total, drop_total), new_kvs = jax.lax.scan(
+                _remat(_seq_shard_body(body, rc, seq_sh), rc), (x, aux_total, drop_total),
+                (params["blocks"], kvs))
+            new_cache = {"kv": new_kvs} if use_cache else None
+        else:
+            def body(carry, xs):
+                h, aux, drop = carry
+                p, kv = xs
+                kv_d = jax.tree.map(lambda c: c[0], kv) if use_cache else None
+                kv_m = jax.tree.map(lambda c: c[1], kv) if use_cache else None
+                h, nkv_d = _dense_layer(
+                    jax.tree.map(lambda a: a, p["dense"]), h, cfg, positions,
+                    kv_d)
+                h, nkv_m, a, d = _moe_layer(p["moe"], h, cfg, positions, kv_m)
+                new_kv = (jax.tree.map(lambda l, m: jnp.stack([l, m]),
+                                       nkv_d, nkv_m) if use_cache else None)
+                return (h, aux + a, drop + d), new_kv
+
+            kvs = cache["kv"] if use_cache else _dummy(n_units)
+            (x, aux_total, drop_total), new_kvs = jax.lax.scan(
+                _remat(_seq_shard_body(body, rc, seq_sh), rc), (x, aux_total, drop_total),
+                (params["blocks"], kvs))
+            new_cache = {"kv": new_kvs} if use_cache else None
+
+    elif fam == "ssm":
+        def body(carry, xs):
+            h = carry
+            p, c = xs
+            h, new_c = _ssm_layer(p, h, cfg, c if use_cache else None)
+            return h, new_c
+        cs = cache["ssm"] if use_cache else _dummy(n_units)
+        x, new_cs = jax.lax.scan(_remat(_seq_shard_body(body, rc, seq_sh), rc), x, (params["blocks"], cs))
+        new_cache = {"ssm": new_cs} if use_cache else None
+
+    elif fam == "hybrid":
+        x0 = x  # embedding stream for the shared block's concat input
+
+        def body(carry, xs):
+            h = carry
+            p, lora, c_ssm, c_kv = xs
+            for j in range(per):
+                pj = jax.tree.map(lambda a: a[j], p)
+                cj = (jax.tree.map(lambda a: a[j], c_ssm)
+                      if use_cache else None)
+                h, new_cj = _ssm_layer(pj, h, cfg, cj)
+                if use_cache:
+                    c_ssm = jax.tree.map(
+                        lambda buf, new, jj=j: buf.at[jj].set(new),
+                        c_ssm, new_cj)
+            h, new_kv = _shared_block(params["shared"], lora, h, x0, cfg,
+                                      positions, c_kv if use_cache else None)
+            return h, (c_ssm, new_kv)
+
+        cs = cache["ssm"] if use_cache else _dummy(n_units)
+        kvs = cache["shared_kv"] if use_cache else _dummy(n_units)
+        x, (new_cs, new_kvs) = jax.lax.scan(
+            _remat(_seq_shard_body(body, rc, seq_sh), rc), x, (params["blocks"], params["lora"], cs, kvs))
+        new_cache = ({"ssm": new_cs, "shared_kv": new_kvs}
+                     if use_cache else None)
+
+    elif fam == "vlm":
+        assert img_embed is not None or use_cache, "VLM needs image embeds"
+
+        def body(carry, xs):
+            h = carry
+            p, kv, ckv = xs
+            for j in range(per - 1):
+                pj = jax.tree.map(lambda a: a[j], p["self"])
+                kvj = jax.tree.map(lambda a: a[j], kv) if use_cache else None
+                h, new_kvj = _dense_layer(pj, h, cfg, positions, kvj)
+                if use_cache:
+                    kv = jax.tree.map(
+                        lambda buf, new, jj=j: buf.at[jj].set(new), kv, new_kvj)
+            pc = p["cross"]
+            hn = L.rms_norm(pc["ln1"], h, cfg.norm_eps)
+            if img_embed is not None:
+                ik = (img_embed.astype(h.dtype)
+                      @ pc["attn"]["wk"].astype(h.dtype)).reshape(
+                          B, -1, cfg.n_kv_heads, cfg.head_dim)
+                iv = (img_embed.astype(h.dtype)
+                      @ pc["attn"]["wv"].astype(h.dtype)).reshape(
+                          B, -1, cfg.n_kv_heads, cfg.head_dim)
+            else:
+                ik, iv = ckv["k"].astype(h.dtype), ckv["v"].astype(h.dtype)
+            a, _ = L.attention(pc["attn"], hn, cfg, positions,
+                               kv_override=(ik, iv))
+            h = h + jnp.tanh(pc["gate"].astype(h.dtype)) * a
+            h = h + L.mlp(pc["mlp"], L.rms_norm(pc["ln2"], h, cfg.norm_eps),
+                          cfg.act)
+            new_ckv = ({"k": ik.astype(jnp.bfloat16),
+                        "v": iv.astype(jnp.bfloat16)} if use_cache else None)
+            return h, (kv, new_ckv)
+
+        kvs = cache["kv"] if use_cache else _dummy(n_units)
+        ckvs = cache["cross_kv"] if use_cache else _dummy(n_units)
+        x, (new_kvs, new_ckvs) = jax.lax.scan(
+            _remat(_seq_shard_body(body, rc, seq_sh), rc), x, (params["blocks"], kvs, ckvs))
+        new_cache = ({"kv": new_kvs, "cross_kv": new_ckvs}
+                     if use_cache else None)
+    else:
+        raise ValueError(fam)
+
+    x = L.rms_norm(params["final_norm"], x, cfg.norm_eps)
+    if fam == "audio":
+        logits = jnp.einsum("bsd,qdv->bsqv", x,
+                            params["heads"].astype(x.dtype))
+        logits = constrain(logits, DATA, None, None, MODEL)
+    else:
+        logits = L.unembed(params["embed"], x)
+    metrics["moe_aux"] = aux_total / max(1, n_units)
+    metrics["moe_drop_frac"] = drop_total / max(1, n_units)
+    return logits, new_cache, metrics
+
+
+def _cache_length(cache, fam):
+    if fam == "vlm":
+        return cache["kv"].length[0, 0]
+    kv = cache["kv"]
+    lead = kv.length.ndim - 1
+    idx = (0,) * lead
+    return kv.length[idx]
+
+
+def _dummy(n: int):
+    return jnp.zeros((n,), jnp.float32)

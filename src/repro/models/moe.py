@@ -1,0 +1,157 @@
+"""Mixture-of-Experts FFN with sort-based capacity dispatch (EP-ready).
+
+Design (DESIGN.md §4): experts are sharded over the MODEL axis (expert
+parallelism).  Token routing uses the static-shape sort/scatter
+formulation rather than GShard's one-hot einsum, so the dispatch tensors
+are O(tokens·k), not O(tokens·E·C):
+
+  1. top-k gate per token,
+  2. flatten (token, expert) assignments and argsort by expert id,
+  3. position-within-expert via searchsorted (rank inside its expert),
+  4. scatter tokens into (E, C, D) expert buffers (capacity-dropped
+     tokens go to a trash slot),
+  5. batched expert GEMMs: einsum over the E axis (sharded on MODEL —
+     GSPMD turns the data→expert resharding into all-to-all-class
+     collectives),
+  6. gather+weighted-sum back per token; dropped slots contribute 0.
+
+The router adds the standard load-balancing auxiliary loss (Switch/GShard
+form).  Capacity factor is configurable; with top-k and cf≥1 the drop
+rate is small and reported in metrics.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import DATA, MODEL, _dense_init, constrain
+
+
+def init_moe(key, cfg: ModelConfig, dtype=jnp.float32):
+    d = cfg.d_model
+    dff = cfg.d_ff_expert or cfg.d_ff
+    E = cfg.n_experts
+    ks = jax.random.split(key, 5)
+    params = {
+        "router": _dense_init(ks[0], d, (d, E), dtype),
+        "w_gate": _dense_init(ks[1], d, (E, d, dff), dtype),
+        "w_up": _dense_init(ks[2], d, (E, d, dff), dtype),
+        "w_down": _dense_init(ks[3], dff, (E, dff, d), dtype),
+    }
+    if cfg.n_shared_experts:
+        se = cfg.n_shared_experts
+        params["shared_gate"] = _dense_init(ks[4], d, (d, se * dff), dtype)
+        params["shared_up"] = _dense_init(ks[4], d, (d, se * dff), dtype)
+        params["shared_down"] = _dense_init(ks[4], se * dff,
+                                            (se * dff, d), dtype)
+    return params
+
+
+def _capacity(tokens_per_row: int, cfg: ModelConfig) -> int:
+    c = int(tokens_per_row * cfg.experts_per_token * cfg.capacity_factor
+            / cfg.n_experts)
+    return max(1, c)
+
+
+def _dispatch_row(x_row, top_idx, top_w, E: int, C: int):
+    """Per-row dispatch.  x_row: (S, D); top_idx/top_w: (S, k).
+
+    Returns (expert_in (E, C, D), combine metadata).
+    """
+    S, D = x_row.shape
+    k = top_idx.shape[-1]
+    T = S * k
+    flat_e = top_idx.reshape(T)
+    flat_tok = jnp.repeat(jnp.arange(S), k)
+    order = jnp.argsort(flat_e, stable=True)
+    sorted_e = flat_e[order]
+    sorted_tok = flat_tok[order]
+    # rank within expert = index - first index of this expert id
+    first = jnp.searchsorted(sorted_e, sorted_e, side="left")
+    pos = jnp.arange(T) - first
+    keep = pos < C
+    slot = jnp.where(keep, sorted_e * C + pos, E * C)   # trash slot at end
+    buf = jnp.zeros((E * C + 1, D), x_row.dtype)
+    expert_in = buf.at[slot].set(x_row[sorted_tok])[:-1].reshape(E, C, D)
+    return expert_in, (order, sorted_tok, slot, keep)
+
+
+def _combine_row(expert_out, meta, top_w, S: int):
+    """expert_out: (E, C, D) → (S, D) weighted sum over each token's k."""
+    order, sorted_tok, slot, keep = meta
+    E, C, D = expert_out.shape
+    flat = jnp.concatenate(
+        [expert_out.reshape(E * C, D), jnp.zeros((1, D), expert_out.dtype)])
+    gathered = flat[slot]                                  # (T, D)
+    w_sorted = top_w.reshape(-1)[order]
+    contrib = gathered * w_sorted[:, None].astype(gathered.dtype)
+    out = jnp.zeros((S, D), expert_out.dtype).at[sorted_tok].add(contrib)
+    return out
+
+
+def moe_ffn(params, x: jax.Array, cfg: ModelConfig, act: str
+            ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """x: (B, S, D) → (out, aux_loss, drop_frac)."""
+    B, S, D = x.shape
+    E, k = cfg.n_experts, cfg.experts_per_token
+    C = _capacity(S, cfg)
+
+    logits = x @ params["router"].astype(x.dtype)            # (B, S, E)
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    top_w, top_idx = jax.lax.top_k(probs, k)
+    top_w = top_w / jnp.clip(top_w.sum(-1, keepdims=True), 1e-9)
+
+    # load-balance aux loss: E * Σ_e f_e * p_e
+    me = jnp.mean(probs, axis=(0, 1))                        # (E,)
+    assign_onehot = jax.nn.one_hot(top_idx, E, dtype=jnp.float32)
+    fe = jnp.mean(assign_onehot.sum(2), axis=(0, 1))         # frac per expert
+    aux = E * jnp.sum(me * fe)
+
+    expert_in, metas = jax.vmap(
+        lambda xr, ti, tw: _dispatch_row(xr, ti, tw, E, C))(x, top_idx, top_w)
+    # expert_in: (B, E, C, D) → merge batch rows into the capacity dim so
+    # each expert sees one GEMM: (E, B·C, D).  Two layouts (DESIGN §4,
+    # EXPERIMENTS §Perf):
+    #   ep_tp   — E on DATA (the batch→expert reshard IS the token
+    #             all-to-all), FF dim TP-sharded on MODEL: expert weights
+    #             never cross the network.  Low top-k / wide experts.
+    #   ep_fsdp — E on MODEL, weights FSDP-gathered over DATA: dispatch
+    #             buffers stay small.  High top-k / narrow experts.
+    ep_tp = cfg.moe_layout_resolved == "ep_tp"
+    e_ax, c_ax, f_ax = ((DATA, None, MODEL) if ep_tp
+                        else (MODEL, DATA, None))
+    expert_in = constrain(expert_in, (None if ep_tp else DATA), e_ax,
+                          None, None)
+    ein = expert_in.transpose(1, 0, 2, 3).reshape(E, B * C, D)
+    ein = constrain(ein, e_ax, c_ax, None)
+
+    g = jnp.einsum("ecd,edf->ecf", ein, params["w_gate"].astype(x.dtype))
+    u = jnp.einsum("ecd,edf->ecf", ein, params["w_up"].astype(x.dtype))
+    g = constrain(g, e_ax, c_ax, f_ax)
+    u = constrain(u, e_ax, c_ax, f_ax)
+    h = (jax.nn.silu(g) if act == "silu" else
+         jax.nn.gelu(g, approximate=True)) * u
+    eout = jnp.einsum("ecf,efd->ecd", h, params["w_down"].astype(x.dtype))
+    eout = constrain(eout, e_ax, c_ax, None)
+    eout = eout.reshape(E, B, C, D).transpose(1, 0, 2, 3)    # (B, E, C, D)
+    eout = constrain(eout, (None if ep_tp else DATA), e_ax, None, None)
+
+    out = jax.vmap(lambda eo, m, tw: _combine_row(eo, m, tw, S))(
+        eout, metas, top_w)
+    out = constrain(out, DATA, None, None)
+
+    keep = metas[3]
+    drop_frac = 1.0 - jnp.mean(keep.astype(jnp.float32))
+
+    if cfg.n_shared_experts:
+        g = x @ params["shared_gate"].astype(x.dtype)
+        u = x @ params["shared_up"].astype(x.dtype)
+        hs = (jax.nn.silu(g) if act == "silu" else
+              jax.nn.gelu(g, approximate=True)) * u
+        out = out + hs @ params["shared_down"].astype(x.dtype)
+
+    return out, aux.astype(jnp.float32), drop_frac

@@ -1,0 +1,460 @@
+"""State-space model blocks: Mamba1 (falcon-mamba) and Mamba2/SSD (zamba2).
+
+TPU-native realization (DESIGN.md §1 Track B): the selective scan is
+chunked so that (a) within-chunk work is either a log-depth associative
+scan (Mamba1, diagonal A) or dense matmuls (Mamba2 SSD — MXU-friendly),
+and (b) the O(1) recurrent state is carried across chunks with a
+`lax.scan`, the direct analogue of HERMES keeping the high-reuse tensor
+(the SSM state) pinned in fast memory while the sequence streams by.
+
+Decode uses an explicit ``SSMCache`` (conv tail + state) — constant memory
+in context length, which is why the ssm/hybrid archs run the 500k-token
+cell that quadratic attention cannot.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import DATA, MODEL, _dense_init, constrain
+
+
+@dataclasses.dataclass
+class SSMCache:
+    """Decode-time state: conv tail (B, W-1, C_conv) + SSM state.
+
+    Mamba1: state (B, d_inner, N);  Mamba2: state (B, H, N, P).
+    """
+
+    conv: jax.Array
+    state: jax.Array
+
+
+jax.tree_util.register_dataclass(
+    SSMCache, data_fields=["conv", "state"], meta_fields=[])
+
+
+# -- causal depthwise conv ----------------------------------------------------
+def causal_conv(x: jax.Array, w: jax.Array) -> jax.Array:
+    """x: (B, L, C); w: (W, C) depthwise causal conv via shifted adds."""
+    W = w.shape[0]
+    out = x * w[-1]
+    for i in range(1, W):
+        shifted = jnp.pad(x, ((0, 0), (i, 0), (0, 0)))[:, :-i or None][:, :x.shape[1]]
+        out = out + shifted * w[-1 - i]
+    return out
+
+
+def conv_step(x_t: jax.Array, conv_buf: jax.Array, w: jax.Array
+              ) -> Tuple[jax.Array, jax.Array]:
+    """Single-token conv: x_t (B, C), conv_buf (B, W-1, C)."""
+    window = jnp.concatenate([conv_buf, x_t[:, None]], axis=1)  # (B, W, C)
+    y = jnp.einsum("bwc,wc->bc", window, w)
+    return y, window[:, 1:]
+
+
+# ============================================================================
+# Mamba1 — diagonal selective scan (falcon-mamba-7b)
+# ============================================================================
+def init_mamba1(key, cfg: ModelConfig, dtype=jnp.float32):
+    d, di, N, R = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.dt_rank
+    ks = jax.random.split(key, 6)
+    return {
+        "in_proj": _dense_init(ks[0], d, (d, 2 * di), dtype),
+        "conv_w": _dense_init(ks[1], cfg.conv_width,
+                              (cfg.conv_width, di), dtype),
+        "x_proj": _dense_init(ks[2], di, (di, R + 2 * N), dtype),
+        "dt_proj": _dense_init(ks[3], R, (R, di), dtype),
+        "dt_bias": jnp.zeros((di,), dtype),
+        "A_log": jnp.log(jnp.broadcast_to(
+            jnp.arange(1, N + 1, dtype=dtype), (di, N)).copy()),
+        "D": jnp.ones((di,), dtype),
+        "out_proj": _dense_init(ks[4], di, (di, d), dtype),
+    }
+
+
+def _mamba1_scan_chunked(a, bx, chunk: int):
+    """h_t = a_t * h_{t-1} + bx_t along axis 1.
+
+    a, bx: (B, L, di, N).  lax.scan over chunks (the O(1) state is the
+    carry — HERMES's pinned tensor); log-depth associative scan within a
+    chunk.  Memory is O(B·chunk·di·N) per step, not O(L).
+    Returns h for every t and the final state.
+    """
+    B, L, di, N = a.shape
+    L_pad = (L + chunk - 1) // chunk * chunk
+    if L_pad != L:
+        a = jnp.pad(a, ((0, 0), (0, L_pad - L), (0, 0), (0, 0)),
+                    constant_values=1.0)
+        bx = jnp.pad(bx, ((0, 0), (0, L_pad - L), (0, 0), (0, 0)))
+    nc = L_pad // chunk
+    a = a.reshape(B, nc, chunk, di, N).swapaxes(0, 1)     # (nc,B,Q,di,N)
+    bx = bx.reshape(B, nc, chunk, di, N).swapaxes(0, 1)
+
+    def combine(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, ar * bl + br
+
+    def step(h_prev, inputs):
+        a_c, bx_c = inputs                                # (B,Q,di,N)
+        a_in, h_in = jax.lax.associative_scan(combine, (a_c, bx_c), axis=1)
+        h_c = h_in + a_in * h_prev[:, None]
+        return h_c[:, -1], h_c
+
+    h_final, h = jax.lax.scan(step, jnp.zeros((B, di, N), a.dtype), (a, bx))
+    h = h.swapaxes(0, 1).reshape(B, L_pad, di, N)[:, :L]
+    return h, h_final
+
+
+def _fused_fwd_chunk(h, xs, A):
+    """One chunk of the fused recurrence; returns (h_out, y_chunk)."""
+    def step(h, ts):
+        dt_t, xc_t, Bm_t, Cm_t = ts                # (B, di)/(B, N)
+        dt32 = dt_t.astype(jnp.float32)
+        a_t = jnp.exp(dt32[..., None] * A)         # (B, di, N) transient
+        drive = (dt32 * xc_t.astype(jnp.float32))[..., None] \
+            * Bm_t.astype(jnp.float32)[:, None, :]
+        h = a_t * h + drive
+        y_t = jnp.einsum("bdn,bn->bd", h, Cm_t.astype(jnp.float32))
+        return h, y_t
+
+    return jax.lax.scan(step, h, xs)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=())
+def _mamba1_scan_core(dt_c, xc_c, Bm_c, Cm_c, A):
+    y, hf = _mamba1_core_fwd(dt_c, xc_c, Bm_c, Cm_c, A)[0]
+    return y, hf
+
+
+def _mamba1_core_fwd(dt_c, xc_c, Bm_c, Cm_c, A):
+    """Forward over chunks; residuals = inputs + CHUNK-BOUNDARY states
+    only ((nc, B, di, N) — 16 states for a 4096 sequence, not 4096)."""
+    B, di = dt_c.shape[2], dt_c.shape[3]
+    N = Bm_c.shape[-1]
+    h0 = jnp.zeros((B, di, N), jnp.float32)
+
+    def body(h, xs):
+        h_new, y_c = _fused_fwd_chunk(h, xs, A)
+        return h_new, (y_c, h)                     # save the ENTRY state
+
+    h_final, (y, h_starts) = jax.lax.scan(
+        body, h0, (dt_c, xc_c, Bm_c, Cm_c))
+    return (y, h_final), (dt_c, xc_c, Bm_c, Cm_c, A, h_starts)
+
+
+def _mamba1_core_bwd(res, cts):
+    """Reverse recurrence (the flash-backward treatment for SSMs —
+    EXPERIMENTS §Perf): walk chunks in reverse; within a chunk, recompute
+    the h trajectory from the saved chunk-entry state (transient,
+    chunk-local), then run
+
+        dh_t   = a_{t+1}·dh_{t+1} + C_t·dy_t
+        ddt_t  = Σ_n (dh_t·h_{t-1}·a_t·A)_n + (dh_t·B_t)_n · x_t
+        dx_t   = dt_t · Σ_n dh_t·B_t
+        dB_t   = Σ_d dh_t·(dt·x)_d ;  dC_t = Σ_d h_t·dy_td
+        dA     = Σ_t dh_t·h_{t-1}·a_t·dt_t
+
+    so no (B, L, di, N) tensor ever reaches HBM — the scan-autodiff
+    default was re-reading chunk residual stacks per timestep (185 s
+    memory term on falcon-mamba train_4k)."""
+    dt_c, xc_c, Bm_c, Cm_c, A, h_starts = res
+    dy, dh_final = cts
+    nc, Q, B, di = dt_c.shape
+    N = Bm_c.shape[-1]
+
+    def chunk_bwd(carry, xs):
+        dh_next, dA_acc = carry
+        dt_k, xc_k, Bm_k, Cm_k, dy_k, h_in = xs
+
+        # recompute the chunk's h trajectory (h_{t-1} per step)
+        def fwd_step(h, ts):
+            dt_t, xc_t, Bm_t = ts
+            dt32 = dt_t.astype(jnp.float32)
+            a_t = jnp.exp(dt32[..., None] * A)
+            h_new = a_t * h + (dt32 * xc_t.astype(jnp.float32))[..., None] \
+                * Bm_t.astype(jnp.float32)[:, None, :]
+            return h_new, h                         # emit h_{t-1}
+        _, h_prevs = jax.lax.scan(fwd_step, h_in, (dt_k, xc_k, Bm_k))
+
+        def bwd_step(carry, ts):
+            dh, dA_a = carry
+            dt_t, xc_t, Bm_t, Cm_t, dy_t, h_prev = ts
+            dt32 = dt_t.astype(jnp.float32)
+            xc32 = xc_t.astype(jnp.float32)
+            Bm32 = Bm_t.astype(jnp.float32)[:, None, :]    # (B,1,N)
+            Cm32 = Cm_t.astype(jnp.float32)
+            a_t = jnp.exp(dt32[..., None] * A)
+            h_t = a_t * h_prev + (dt32 * xc32)[..., None] * Bm32
+            # dy_t contributes through y_t = h_t · C_t
+            dh_t = dh + dy_t.astype(jnp.float32)[..., None] * Cm32[:, None, :]
+            dC_t = jnp.einsum("bdn,bd->bn", h_t,
+                              dy_t.astype(jnp.float32))
+            da = dh_t * h_prev                              # ∂/∂a_t
+            ddrive = dh_t                                   # ∂/∂drive
+            ddt = (jnp.einsum("bdn,dn->bd", da * a_t, A)
+                   + jnp.einsum("bdn,bn->bd", ddrive, Bm32[:, 0]) * xc32)
+            dx = jnp.einsum("bdn,bn->bd", ddrive, Bm32[:, 0]) * dt32
+            dB = jnp.einsum("bdn,bd->bn", ddrive, dt32 * xc32)
+            dA_a = dA_a + jnp.sum(da * a_t * dt32[..., None], axis=0)
+            dh_prev = dh_t * a_t
+            return (dh_prev, dA_a), (ddt, dx, dB, dC_t)
+
+        (dh_in, dA_acc), grads = jax.lax.scan(
+            bwd_step, (dh_next, dA_acc),
+            (dt_k, xc_k, Bm_k, Cm_k, dy_k, h_prevs), reverse=True)
+        return (dh_in, dA_acc), grads
+
+    dA0 = jnp.zeros_like(A)
+    (_, dA), (ddt, dxc, dBm, dCm) = jax.lax.scan(
+        chunk_bwd, (dh_final, dA0),
+        (dt_c, xc_c, Bm_c, Cm_c,
+         dy.astype(jnp.float32), h_starts), reverse=True)
+    return (ddt.astype(dt_c.dtype), dxc.astype(xc_c.dtype),
+            dBm.astype(Bm_c.dtype), dCm.astype(Cm_c.dtype), dA)
+
+
+def _mamba1_core_fwd_vjp(dt_c, xc_c, Bm_c, Cm_c, A):
+    out, res = _mamba1_core_fwd(dt_c, xc_c, Bm_c, Cm_c, A)
+    return out, res
+
+
+_mamba1_scan_core.defvjp(_mamba1_core_fwd_vjp, _mamba1_core_bwd)
+
+
+def _mamba1_scan_fused(dt, xc, Bm, Cm, A, chunk: int):
+    """Fused selective scan: h_t = exp(dt_t·A)·h + (dt_t·x_t)·B_t along L,
+    y_t = h_t·C_t — WITHOUT materializing any (B, L, di, N) tensor.
+
+    The (di, N) expansion and the C-projection happen per-timestep inside
+    the inner scan, so HBM traffic is O(B·L·(di+N)) instead of
+    O(B·L·di·N·log chunk) — the HERMES pinned-state formulation
+    (EXPERIMENTS §Perf, falcon-mamba hillclimb: memory term 104× down on
+    prefill).  Backward is a custom-VJP reverse recurrence saving only
+    chunk-boundary states (see _mamba1_core_bwd).
+
+    dt, xc: (B, L, di); Bm, Cm: (B, L, N); A: (di, N) negative reals.
+    Returns y (B, L, di), h_final (B, di, N) in f32.
+    """
+    B, L, di = dt.shape
+    N = Bm.shape[-1]
+    L_pad = (L + chunk - 1) // chunk * chunk
+    if L_pad != L:
+        pad = L_pad - L
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        xc = jnp.pad(xc, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+    nc = L_pad // chunk
+
+    def to_chunks(t):
+        return (t.reshape(B, nc, chunk, t.shape[-1])
+                .swapaxes(0, 1).swapaxes(1, 2))    # (nc, chunk, B, ·)
+
+    dt_c, xc_c, Bm_c, Cm_c = map(to_chunks, (dt, xc, Bm, Cm))
+    y, h_final = _mamba1_scan_core(dt_c, xc_c, Bm_c, Cm_c, A)
+    y = y.reshape(L_pad, B, di).swapaxes(0, 1)[:, :L]
+    return y, h_final
+
+
+def mamba1(params, x: jax.Array, cfg: ModelConfig,
+           cache: Optional[SSMCache] = None, chunk: int = 256,
+           ) -> Tuple[jax.Array, Optional[SSMCache]]:
+    """x: (B, L, d) train/prefill, or (B, 1, d) decode with cache."""
+    B, L, _ = x.shape
+    di, N = cfg.d_inner, cfg.ssm_state
+    xz = x @ params["in_proj"].astype(x.dtype)
+    xs, z = jnp.split(xz, 2, axis=-1)
+    xs = constrain(xs, DATA, None, MODEL)
+
+    if cache is not None and L == 1:
+        xc, new_conv = conv_step(xs[:, 0], cache.conv, params["conv_w"].astype(x.dtype))
+        xc = jax.nn.silu(xc)
+        dbc = xc @ params["x_proj"].astype(x.dtype)
+        dt, Bm, Cm = jnp.split(dbc, [cfg.dt_rank, cfg.dt_rank + N], axis=-1)
+        dt = jax.nn.softplus(dt @ params["dt_proj"].astype(x.dtype)
+                             + params["dt_bias"].astype(x.dtype))
+        A = -jnp.exp(params["A_log"].astype(jnp.float32))
+        a = jnp.exp(dt.astype(jnp.float32)[..., None] * A)        # (B, di, N)
+        bx = (dt * xc).astype(jnp.float32)[..., None] * Bm[:, None, :].astype(jnp.float32)
+        h = a * cache.state + bx
+        y = jnp.einsum("bdn,bn->bd", h, Cm.astype(jnp.float32))
+        y = y.astype(x.dtype) + params["D"].astype(x.dtype) * xc
+        y = y * jax.nn.silu(z[:, 0])
+        out = (y @ params["out_proj"].astype(x.dtype))[:, None]
+        return constrain(out, DATA, None, None), SSMCache(new_conv, h)
+
+    xc = causal_conv(xs, params["conv_w"].astype(x.dtype))
+    xc = jax.nn.silu(xc)
+    dbc = xc @ params["x_proj"].astype(x.dtype)
+    dt, Bm, Cm = jnp.split(dbc, [cfg.dt_rank, cfg.dt_rank + N], axis=-1)
+    dt = jax.nn.softplus(dt @ params["dt_proj"].astype(x.dtype)
+                         + params["dt_bias"].astype(x.dtype))   # (B, L, di)
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))           # (di, N)
+    # fused scan: never materializes (B, L, di, N) — see _mamba1_scan_fused
+    y, h_final = _mamba1_scan_fused(dt, xc, Bm, Cm, A, chunk)
+    y = y.astype(x.dtype) + params["D"].astype(x.dtype) * xc
+    y = y * jax.nn.silu(z)
+    out = y @ params["out_proj"].astype(x.dtype)
+    new_cache = None
+    if cache is not None:
+        tail = xs[:, -(cfg.conv_width - 1):]
+        pad = cfg.conv_width - 1 - tail.shape[1]
+        if pad > 0:
+            tail = jnp.pad(tail, ((0, 0), (pad, 0), (0, 0)))
+        new_cache = SSMCache(tail, h_final)
+    return constrain(out, DATA, None, None), new_cache
+
+
+# ============================================================================
+# Mamba2 / SSD — matmul-form chunked scan (zamba2)
+# ============================================================================
+def init_mamba2(key, cfg: ModelConfig, dtype=jnp.float32):
+    d, di, N = cfg.d_model, cfg.d_inner, cfg.ssm_state
+    H = cfg.ssm_heads
+    ks = jax.random.split(key, 4)
+    conv_ch = di + 2 * N  # conv over (x, B, C)
+    return {
+        "in_proj": _dense_init(ks[0], d, (d, 2 * di + 2 * N + H), dtype),
+        "conv_w": _dense_init(ks[1], cfg.conv_width,
+                              (cfg.conv_width, conv_ch), dtype),
+        "A_log": jnp.zeros((H,), dtype),
+        "dt_bias": jnp.zeros((H,), dtype),
+        "D": jnp.ones((H,), dtype),
+        "norm_scale": jnp.ones((di,), dtype),
+        "out_proj": _dense_init(ks[2], di, (di, d), dtype),
+    }
+
+
+def _ssd_chunked(xh, a_log, Bm, Cm, chunk: int):
+    """SSD: y_t = C_t · h_t,  h_t = exp(a_t) h_{t-1} + B_t ⊗ x_t.
+
+    xh: (B, L, H, P); a_log: (B, L, H) = dt*A (negative);
+    Bm/Cm: (B, L, N).  Returns (y, final_state (B, H, N, P)).
+    All within-chunk work is dense matmuls (MXU-friendly SSD form).
+    """
+    Bsz, L, H, Pd = xh.shape
+    N = Bm.shape[-1]
+    L_pad = (L + chunk - 1) // chunk * chunk
+    if L_pad != L:
+        pad = L_pad - L
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        a_log = jnp.pad(a_log, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+    nc = L_pad // chunk
+    # scan over chunks: per-step memory O(B·Q²·H), state carried (pinned)
+    xh = xh.reshape(Bsz, nc, chunk, H, Pd).swapaxes(0, 1)
+    a_log = a_log.reshape(Bsz, nc, chunk, H).swapaxes(0, 1).astype(jnp.float32)
+    Bm = Bm.reshape(Bsz, nc, chunk, N).swapaxes(0, 1)
+    Cm = Cm.reshape(Bsz, nc, chunk, N).swapaxes(0, 1)
+    ii = jnp.arange(chunk)
+    causal = (ii[:, None] >= ii[None, :])[None, :, :, None]  # (1,Q,Q,1)
+
+    def step(h_prev, inp):
+        xh_c, al_c, B_c, C_c = inp            # (B,Q,H,P),(B,Q,H),(B,Q,N)×2
+        cum = jnp.cumsum(al_c, axis=1)                       # (B,Q,H)
+        diff = cum[:, :, None, :] - cum[:, None, :, :]       # (B,Q,Q,H)
+        M = jnp.where(causal, jnp.exp(diff), 0.0)
+        CB = jnp.einsum("bin,bjn->bij", C_c.astype(jnp.float32),
+                        B_c.astype(jnp.float32))             # (B,Q,Q)
+        W = CB[..., None] * M                                # (B,Q,Q,H)
+        y_intra = jnp.einsum("bijh,bjhp->bihp", W, xh_c.astype(jnp.float32))
+        # inter-chunk: contribution of the carried state
+        decay_in = jnp.exp(cum)                              # (B,Q,H)
+        y_inter = jnp.einsum("bin,bhnp,bih->bihp",
+                             C_c.astype(jnp.float32), h_prev, decay_in)
+        # update state: h_new = exp(sum a) h_prev + Σ_j decay_tail B_j ⊗ x_j
+        decay_tail = jnp.exp(cum[:, -1:, :] - cum)           # (B,Q,H)
+        S_c = jnp.einsum("bjn,bjh,bjhp->bhnp",
+                         B_c.astype(jnp.float32), decay_tail,
+                         xh_c.astype(jnp.float32))
+        h_new = jnp.exp(cum[:, -1, :])[..., None, None] * h_prev + S_c
+        return h_new, y_intra + y_inter
+
+    h0 = jnp.zeros((Bsz, H, N, Pd), jnp.float32)
+    h_final, y = jax.lax.scan(step, h0, (xh, a_log, Bm, Cm))
+    y = y.swapaxes(0, 1).reshape(Bsz, L_pad, H, Pd)[:, :L]
+    return y, h_final
+
+
+def mamba2(params, x: jax.Array, cfg: ModelConfig,
+           cache: Optional[SSMCache] = None, chunk: Optional[int] = None,
+           ) -> Tuple[jax.Array, Optional[SSMCache]]:
+    B, L, _ = x.shape
+    di, N, H = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    Pd = di // H
+    chunk = chunk or cfg.ssm_chunk
+    proj = x @ params["in_proj"].astype(x.dtype)
+    z, xbc, dt = jnp.split(proj, [di, 2 * di + 2 * N], axis=-1)
+    xbc = constrain(xbc, DATA, None, None)
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))          # (H,)
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + params["dt_bias"].astype(jnp.float32))  # (B,L,H)
+
+    if cache is not None and L == 1:
+        xbc_t, new_conv = conv_step(xbc[:, 0], cache.conv,
+                                    params["conv_w"].astype(x.dtype))
+        xbc_t = jax.nn.silu(xbc_t)
+        xs, Bm, Cm = jnp.split(xbc_t, [di, di + N], axis=-1)
+        xh = xs.reshape(B, H, Pd).astype(jnp.float32)
+        dt0 = dt[:, 0]                                         # (B,H)
+        a = jnp.exp(dt0 * A)                                   # (B,H)
+        dx = dt0[..., None] * xh                               # (B,H,P)
+        upd = Bm[:, None, :, None].astype(jnp.float32) * dx[:, :, None, :]
+        h = a[..., None, None] * cache.state + upd             # (B,H,N,P)
+        y = jnp.einsum("bn,bhnp->bhp", Cm.astype(jnp.float32), h)
+        y = y + params["D"].astype(jnp.float32)[None, :, None] * xh
+        y = y.reshape(B, di).astype(x.dtype)
+        y = _gated_norm(y, z[:, 0], params, cfg)
+        out = (y @ params["out_proj"].astype(x.dtype))[:, None]
+        return constrain(out, DATA, None, None), SSMCache(new_conv, h)
+
+    xbc_c = jax.nn.silu(causal_conv(xbc, params["conv_w"].astype(x.dtype)))
+    xs, Bm, Cm = jnp.split(xbc_c, [di, di + N], axis=-1)
+    xh = xs.reshape(B, L, H, Pd)
+    a_log = dt * A                                             # (B,L,H)
+    dx = dt[..., None].astype(jnp.float32) * xh.astype(jnp.float32)
+    y, h_final = _ssd_chunked(dx, a_log, Bm, Cm, chunk)
+    y = y + params["D"].astype(jnp.float32)[None, None, :, None] \
+        * xh.astype(jnp.float32)
+    y = y.reshape(B, L, di).astype(x.dtype)
+    y = _gated_norm(y, z, params, cfg)
+    out = y @ params["out_proj"].astype(x.dtype)
+    new_cache = None
+    if cache is not None:
+        tail = xbc[:, -(cfg.conv_width - 1):]
+        pad = cfg.conv_width - 1 - tail.shape[1]
+        if pad > 0:
+            tail = jnp.pad(tail, ((0, 0), (pad, 0), (0, 0)))
+        new_cache = SSMCache(tail, h_final)
+    return constrain(out, DATA, None, None), new_cache
+
+
+def _gated_norm(y, z, params, cfg: ModelConfig):
+    """Mamba2's gated RMSNorm: norm(y * silu(z))."""
+    g = y * jax.nn.silu(z)
+    gf = g.astype(jnp.float32)
+    var = jnp.mean(jnp.square(gf), axis=-1, keepdims=True)
+    out = gf * jax.lax.rsqrt(var + cfg.norm_eps)
+    return (out * params["norm_scale"].astype(jnp.float32)).astype(y.dtype)
+
+
+def init_ssm_cache(cfg: ModelConfig, batch: int, dtype=jnp.float32) -> SSMCache:
+    if cfg.ssm_version == 1:
+        conv = jnp.zeros((batch, cfg.conv_width - 1, cfg.d_inner), dtype)
+        state = jnp.zeros((batch, cfg.d_inner, cfg.ssm_state), jnp.float32)
+    else:
+        conv_ch = cfg.d_inner + 2 * cfg.ssm_state
+        Pd = cfg.d_inner // cfg.ssm_heads
+        conv = jnp.zeros((batch, cfg.conv_width - 1, conv_ch), dtype)
+        state = jnp.zeros((batch, cfg.ssm_heads, cfg.ssm_state, Pd),
+                          jnp.float32)
+    return SSMCache(conv, state)

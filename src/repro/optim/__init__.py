@@ -1,0 +1,3 @@
+from repro.optim.adamw import (AdamWState, adamw_init,  # noqa: F401
+                               adamw_update, opt_state_specs)
+from repro.optim.schedule import cosine_schedule  # noqa: F401

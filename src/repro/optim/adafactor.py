@@ -1,0 +1,162 @@
+"""Adafactor (Shazeer & Stern, 2018) — factored second moments.
+
+Why it exists here: 400B-class training on 256 × 16 GiB v5e chips is
+capacity-infeasible with AdamW (2 full moments ≥ params×2 even at bf16).
+Adafactor stores a row vector + column vector per matrix instead of the
+full second moment — state is ~1/d of AdamW's — which is how T5X-era
+frameworks actually trained at this chip-memory ratio.  DESIGN §4.
+
+Implementation notes:
+  * factored only for leaves with ≥2 trailing dims ≥ 128 (stacked layer
+    leaves factor their LAST TWO dims; the leading unit axis is kept);
+  * scalar/vector leaves fall back to an unfactored v;
+  * update-clipping (RMS(u)≤d) and the relative-step schedule are
+    implemented per the paper; momentum optional (off by default, which
+    is the memory-lean configuration).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import RunConfig
+
+_FACTOR_MIN = 128
+
+
+@dataclasses.dataclass
+class AdafactorState:
+    vr: Any            # row second moments (factored) or full v (fallback)
+    vc: Any            # col second moments (factored) or () placeholders
+    step: jax.Array
+
+
+jax.tree_util.register_dataclass(
+    AdafactorState, data_fields=["vr", "vc", "step"], meta_fields=[])
+
+
+def _factored(shape) -> bool:
+    return (len(shape) >= 2 and shape[-1] >= _FACTOR_MIN
+            and shape[-2] >= _FACTOR_MIN)
+
+
+def adafactor_init(params, rc: RunConfig) -> AdafactorState:
+    odt = jnp.dtype(rc.optimizer_dtype)
+
+    def vr_init(p):
+        if _factored(p.shape):
+            return jnp.zeros(p.shape[:-1], odt)           # drop cols
+        return jnp.zeros(p.shape, odt)
+
+    def vc_init(p):
+        if _factored(p.shape):
+            return jnp.zeros(p.shape[:-2] + p.shape[-1:], odt)  # drop rows
+        return jnp.zeros((1,), odt)
+
+    return AdafactorState(
+        vr=jax.tree.map(vr_init, params),
+        vc=jax.tree.map(vc_init, params),
+        step=jnp.zeros((), jnp.int32),
+    )
+
+
+def adafactor_state_specs(pspecs):
+    """Spec tree mirroring adafactor_init.
+
+    Factored rows/cols inherit the parameter's specs with the trailing
+    dim(s) dropped; we conservatively keep only the leading axes' specs
+    (the reduced dims disappear).  Unfactored fallbacks reuse the param
+    spec; the (1,)-shaped vc placeholders are replicated.
+    """
+    from jax.sharding import PartitionSpec as P
+
+    def vr_spec(s):
+        return P(*tuple(s)[:-1]) if len(tuple(s)) >= 1 else P()
+
+    def vc_spec(s):
+        t = tuple(s)
+        return P(*(t[:-2] + t[-1:])) if len(t) >= 2 else P(None)
+
+    return AdafactorState(
+        vr=jax.tree.map(vr_spec, pspecs, is_leaf=lambda x: isinstance(x, P)),
+        vc=jax.tree.map(vc_spec, pspecs, is_leaf=lambda x: isinstance(x, P)),
+        step=P(),
+    )
+
+
+def adafactor_update(params, grads, state: AdafactorState, rc: RunConfig,
+                     lr: Optional[jax.Array] = None,
+                     eps1: float = 1e-30, eps2: float = 1e-3,
+                     clip_threshold: float = 1.0,
+                     ) -> Tuple[Any, AdafactorState, Dict[str, jax.Array]]:
+    odt = jnp.dtype(rc.optimizer_dtype)
+    step = state.step + 1
+    stepf = step.astype(jnp.float32)
+    lr = rc.learning_rate if lr is None else lr
+    beta2 = 1.0 - stepf ** -0.8                    # paper's t^-0.8 schedule
+    wd = rc.weight_decay
+
+    def upd(p, g, vr, vc):
+        g32 = g.astype(jnp.float32)
+        g2 = jnp.square(g32) + eps1
+        if _factored(p.shape):
+            vr32 = beta2 * vr.astype(jnp.float32) + (1 - beta2) * g2.mean(-1)
+            vc32 = beta2 * vc.astype(jnp.float32) + (1 - beta2) * g2.mean(-2)
+            denom = (vr32 / jnp.maximum(
+                vr32.mean(-1, keepdims=True), eps1))[..., None] * \
+                vc32[..., None, :]
+            u = g32 * jax.lax.rsqrt(denom + eps1)
+            new_vr, new_vc = vr32.astype(odt), vc32.astype(odt)
+        else:
+            v32 = beta2 * vr.astype(jnp.float32) + (1 - beta2) * g2
+            u = g32 * jax.lax.rsqrt(v32 + eps1)
+            new_vr, new_vc = v32.astype(odt), vc
+        # update clipping: RMS(u) ≤ clip_threshold
+        rms_u = jnp.sqrt(jnp.mean(jnp.square(u)) + eps1)
+        u = u / jnp.maximum(1.0, rms_u / clip_threshold)
+        p32 = p.astype(jnp.float32)
+        scale = lr * jnp.maximum(eps2, _rms(p32))
+        new_p = p32 - scale * u - lr * wd * p32
+        return new_p.astype(p.dtype), new_vr, new_vc
+
+    from repro.optim.adamw import global_norm
+    gnorm = global_norm(grads)
+    # phase barrier — see adamw_update: keeps the norm phase's f32 upcasts
+    # from being CSE-shared with (and kept live into) the update phase
+    (params, grads, state), gnorm = jax.lax.optimization_barrier(
+        ((params, grads, state), gnorm))
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_vr = jax.tree.leaves(state.vr)
+    flat_vc = jax.tree.leaves(state.vc)
+    # barrier-chain large leaves: bounds concurrent f32 upcast temps to
+    # one leaf's working set (same rationale as adamw_update)
+    out = []
+    token = None
+    for p, g, vr, vc in zip(flat_p, flat_g, flat_vr, flat_vc):
+        if token is not None and p.size > (1 << 22):
+            (p, g, vr, vc), _ = jax.lax.optimization_barrier(
+                ((p, g, vr, vc), token))
+        # stream layer-stacked leaves one layer at a time (see adamw);
+        # bonus: RMS update-clipping becomes per-layer-tensor, which is
+        # the paper's per-tensor semantics for our stacked storage
+        if p.ndim >= 3 and p.shape[0] >= 4 and p.size > (1 << 22):
+            o = tuple(jax.lax.map(lambda a: upd(*a), (p, g, vr, vc)))
+        else:
+            o = upd(p, g, vr, vc)
+        if p.size > (1 << 22):
+            token = o[0]
+        out.append(o)
+    new_p = jax.tree.unflatten(treedef, [o[0] for o in out])
+    new_vr = jax.tree.unflatten(treedef, [o[1] for o in out])
+    new_vc = jax.tree.unflatten(treedef, [o[2] for o in out])
+    metrics = {"grad_norm": gnorm, "lr": jnp.asarray(lr, jnp.float32)}
+    return new_p, AdafactorState(new_vr, new_vc, step), metrics
+
+
+def _rms(x):
+    return jnp.sqrt(jnp.mean(jnp.square(x)) + 1e-30)

@@ -1,0 +1,16 @@
+"""Learning-rate schedules (pure functions of the step counter)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def cosine_schedule(step, peak_lr: float, warmup: int = 200,
+                    total: int = 10_000, floor_frac: float = 0.1):
+    """Linear warmup → cosine decay to ``floor_frac * peak``."""
+    step = step.astype(jnp.float32)
+    warm = peak_lr * step / max(1, warmup)
+    prog = jnp.clip((step - warmup) / max(1, total - warmup), 0.0, 1.0)
+    floor = peak_lr * floor_frac
+    cos = floor + 0.5 * (peak_lr - floor) * (1 + jnp.cos(jnp.pi * prog))
+    return jnp.where(step < warmup, warm, cos)

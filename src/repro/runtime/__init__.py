@@ -1,0 +1,2 @@
+from repro.runtime.fault import (PreemptionHandler,  # noqa: F401
+                                 StragglerMonitor, ElasticTopology)

@@ -1,0 +1,139 @@
+"""Fault-tolerance runtime: preemption, stragglers, elastic topology.
+
+These are the 1000-node mechanisms (DESIGN §4) in host-side form; each is
+unit-tested for its decision logic, and the train loop wires them in:
+
+  * PreemptionHandler — SIGTERM/SIGINT → request a final checkpoint at
+    the next step boundary (TPU preemption notice is delivered as
+    SIGTERM ~30 s ahead).  The loop polls ``should_stop``.
+  * StragglerMonitor — robust per-step deadline from a rolling median
+    (median + k·MAD, floored); a step exceeding it marks the step
+    "straggled".  Policy at scale: after ``patience`` consecutive
+    straggles the runner requests a *rebuild* — checkpoint, drop the
+    slow host from the fleet list, re-launch on the survivors (the
+    skip-and-rebuild play, since GSPMD cannot hot-swap a dead chip).
+  * ElasticTopology — given a fleet size, proposes the largest
+    (pod, data, model) mesh our sharding supports, so a restart after
+    losing hosts picks a working mesh automatically; checkpoint restore
+    re-shards onto it (tests/test_runtime.py covers shrink and grow).
+"""
+
+from __future__ import annotations
+
+import math
+import signal
+import statistics
+import time
+from typing import List, Optional, Tuple
+
+
+class PreemptionHandler:
+    def __init__(self, install: bool = True):
+        self._stop = False
+        self._installed = []
+        if install:
+            for sig in (signal.SIGTERM, signal.SIGINT):
+                try:
+                    prev = signal.signal(sig, self._handler)
+                    self._installed.append((sig, prev))
+                except ValueError:        # non-main thread (tests)
+                    pass
+
+    def _handler(self, signum, frame):
+        self._stop = True
+
+    def request_stop(self) -> None:      # test / manual hook
+        self._stop = True
+
+    @property
+    def should_stop(self) -> bool:
+        return self._stop
+
+    def uninstall(self) -> None:
+        for sig, prev in self._installed:
+            signal.signal(sig, prev)
+        self._installed.clear()
+
+
+class StragglerMonitor:
+    """Rolling-median step-deadline monitor with skip-and-rebuild policy."""
+
+    def __init__(self, window: int = 32, k_mad: float = 6.0,
+                 floor_s: float = 0.05, patience: int = 3):
+        self.window = window
+        self.k_mad = k_mad
+        self.floor_s = floor_s
+        self.patience = patience
+        self.times: List[float] = []
+        self.consecutive = 0
+        self.straggled_steps: List[int] = []
+        self._t0: Optional[float] = None
+        self._step = 0
+
+    def start_step(self, step: int) -> None:
+        self._step = step
+        self._t0 = time.monotonic()
+
+    def deadline(self) -> Optional[float]:
+        if len(self.times) < 8:
+            return None
+        med = statistics.median(self.times)
+        mad = statistics.median(abs(t - med) for t in self.times) or 1e-3
+        # med*1.5 floor: zero-variance warmups must still tolerate the
+        # ordinary jitter of a healthy step
+        return max(self.floor_s, 1.5 * med, med + self.k_mad * mad)
+
+    def end_step(self, elapsed: Optional[float] = None) -> bool:
+        """Returns True if this step straggled."""
+        if elapsed is None:
+            elapsed = time.monotonic() - (self._t0 or time.monotonic())
+        dl = self.deadline()
+        straggled = dl is not None and elapsed > dl
+        if straggled:
+            self.straggled_steps.append(self._step)
+            self.consecutive += 1
+        else:
+            self.consecutive = 0
+            self.times.append(elapsed)
+            if len(self.times) > self.window:
+                self.times.pop(0)
+        return straggled
+
+    @property
+    def should_rebuild(self) -> bool:
+        """Persistent straggle → the host is sick, not the step: request
+        checkpoint + fleet shrink + relaunch."""
+        return self.consecutive >= self.patience
+
+
+class ElasticTopology:
+    """Mesh proposals for a (possibly shrunk) fleet.
+
+    Keeps the model axis fixed (TP degree is an arch property) and fits
+    the largest power-of-two data axis; pods are carved off when the
+    fleet spans DCN domains.
+    """
+
+    def __init__(self, model_parallel: int = 16, chips_per_host: int = 4):
+        self.model = model_parallel
+        self.chips_per_host = chips_per_host
+
+    def propose(self, n_chips: int,
+                chips_per_pod: int = 256) -> Tuple[int, int, int]:
+        """Returns (pod, data, model) with pod·data·model ≤ n_chips."""
+        if n_chips < self.model:
+            raise ValueError(
+                f"fleet of {n_chips} chips cannot host TP={self.model}")
+        pods = max(1, n_chips // chips_per_pod)
+        per_pod = n_chips // pods
+        data = 1 << int(math.log2(max(1, per_pod // self.model)))
+        while pods > 1 and data < 1:
+            pods -= 1
+            per_pod = n_chips // pods
+            data = 1 << int(math.log2(max(1, per_pod // self.model)))
+        return pods, max(1, data), self.model
+
+    def batch_for(self, topo: Tuple[int, int, int],
+                  per_shard_batch: int = 8) -> int:
+        pods, data, _ = topo
+        return pods * data * per_shard_batch

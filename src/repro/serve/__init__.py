@@ -1,0 +1,2 @@
+from repro.serve.steps import (build_decode_step,  # noqa: F401
+                               build_prefill_step, decode_cache_specs)

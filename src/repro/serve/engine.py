@@ -1,0 +1,118 @@
+"""Continuous-batching serving engine.
+
+The scheduling layer above serve/steps.py: requests arrive with a prompt
+and a token budget; the engine maintains a fixed-width decode batch,
+refilling freed slots by prefilling queued requests — vLLM-style
+continuous batching on a dense per-slot cache, with the paged/tiered
+cache manager (tpu/kv_cache.py) tracking page residency for the HERMES
+eviction/prefetch policies.
+
+Single-host reference implementation: correctness (prefill→decode
+consistency, slot recycling, determinism) is what the tests pin down;
+the dry-run lowers the same step functions at production shapes.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, RunConfig
+from repro.models import model as mdl
+from repro.serve.steps import build_decode_step, build_prefill_step
+from repro.tpu.kv_cache import PagedKVManager
+
+
+@dataclasses.dataclass
+class Request:
+    req_id: int
+    prompt: np.ndarray           # (S,) or (S, nq) tokens
+    max_new_tokens: int
+    out_tokens: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ServingEngine:
+    def __init__(self, cfg: ModelConfig, rc: RunConfig, params,
+                 batch_slots: int = 4, max_seq: int = 512,
+                 greedy: bool = True, page_size: int = 16):
+        self.cfg = cfg
+        self.rc = rc
+        self.params = params
+        self.slots = batch_slots
+        self.max_seq = max_seq
+        self.greedy = greedy
+        self.prefill = jax.jit(build_prefill_step(cfg, rc, max_seq))
+        self.decode = jax.jit(build_decode_step(cfg, rc))
+        self.queue: List[Request] = []
+        self.active: List[Optional[Request]] = [None] * batch_slots
+        # one dense cache per slot (batch=1) so slots swap independently
+        self.caches: List[Optional[Dict]] = [None] * batch_slots
+        pages_per_seq = max(1, -(-max_seq // page_size))
+        self.pages = PagedKVManager(
+            page_size=page_size,
+            hbm_budget_pages=batch_slots * pages_per_seq,
+            host_budget_pages=4 * batch_slots * pages_per_seq)
+        self.steps = 0
+
+    # -- API --------------------------------------------------------------------
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    def run(self, max_steps: int = 10_000) -> List[Request]:
+        finished: List[Request] = []
+        while (any(self.active) or self.queue) and self.steps < max_steps:
+            self._fill_slots()
+            self._decode_once(finished)
+            self.steps += 1
+        return finished
+
+    # -- internals -----------------------------------------------------------------
+    def _sample(self, logits: jax.Array) -> int:
+        if self.cfg.family == "audio":
+            # one token per codebook; engine tracks codebook 0 for stop
+            return int(jnp.argmax(logits[0]))
+        return int(jnp.argmax(logits))
+
+    def _fill_slots(self) -> None:
+        for slot in range(self.slots):
+            if self.active[slot] is not None or not self.queue:
+                continue
+            req = self.queue.pop(0)
+            toks = jnp.asarray(req.prompt)[None]
+            logits, cache = self.prefill(self.params, toks)
+            for t in range(len(req.prompt)):
+                self.pages.append_token(req.req_id)
+            first = self._sample(logits[0])
+            req.out_tokens.append(first)
+            self.active[slot] = req
+            self.caches[slot] = cache
+
+    def _decode_once(self, finished: List[Request]) -> None:
+        for slot in range(self.slots):
+            req = self.active[slot]
+            if req is None:
+                continue
+            self.pages.prefetch_for_decode(req.req_id)
+            last = req.out_tokens[-1]
+            if self.cfg.family == "audio":
+                tok = jnp.full((1, 1, self.cfg.n_codebooks), last, jnp.int32)
+            else:
+                tok = jnp.asarray([[last]], jnp.int32)
+            logits, cache = self.decode(self.params, self.caches[slot], tok)
+            self.pages.append_token(req.req_id)
+            nxt = self._sample(logits[0])
+            req.out_tokens.append(nxt)
+            self.caches[slot] = cache
+            total = len(req.prompt) + len(req.out_tokens)
+            if (len(req.out_tokens) >= req.max_new_tokens
+                    or total >= self.max_seq - 1):
+                req.done = True
+                finished.append(req)
+                self.pages.free_seq(req.req_id)
+                self.active[slot] = None
+                self.caches[slot] = None

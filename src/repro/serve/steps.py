@@ -1,0 +1,73 @@
+"""Serving step functions: prefill (flash, cache-filling) and decode.
+
+``prefill_32k`` lowers ``prefill_step`` (B=32 × S=32768 self-attention
+through the chunked flash path, writing the dense KV cache); ``decode_32k``
+and ``long_500k`` lower ``decode_step`` (one new token against a cache of
+``seq_len``, the KV cache sharded per dist/sharding.cache_specs).
+
+The paged / tiered KV cache (HERMES tensor-aware caching on TPU) lives in
+tpu/kv_cache.py and is used by serve/engine.py; these dense-cache steps
+are the GSPMD-lowered production path the dry-run compiles.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, RunConfig
+from repro.dist import sharding as shd
+from repro.models import model as mdl
+
+
+def build_prefill_step(cfg: ModelConfig, rc: RunConfig, max_seq: int):
+    """(params, tokens[, img_embed]) → (last_logits, cache).
+
+    The cache is created inside (zeros) at ``max_seq`` capacity so the
+    lowered computation owns its KV buffers — memory_analysis() then
+    reports the true serving footprint.
+    """
+    cdt = jnp.dtype(rc.compute_dtype)
+
+    def prefill_step(params, tokens, img_embed=None):
+        B = tokens.shape[0]
+        params_c = jax.tree.map(
+            lambda p: p.astype(cdt)
+            if jnp.issubdtype(p.dtype, jnp.floating) else p, params)
+        cache = mdl.init_cache(cfg, B, max_seq, dtype=cdt,
+                               img_tokens=cfg.n_img_tokens)
+        logits, cache, _ = mdl.forward(params_c, cfg, rc, tokens,
+                                       cache=cache, img_embed=img_embed)
+        return logits[:, -1], cache
+
+    return prefill_step
+
+
+def build_decode_step(cfg: ModelConfig, rc: RunConfig):
+    """(params, cache, tokens (B,1[,nq])) → (logits (B,V...), cache)."""
+    cdt = jnp.dtype(rc.compute_dtype)
+
+    def decode_step(params, cache, tokens):
+        params_c = jax.tree.map(
+            lambda p: p.astype(cdt)
+            if jnp.issubdtype(p.dtype, jnp.floating) else p, params)
+        logits, cache, _ = mdl.forward(params_c, cfg, rc, tokens,
+                                       cache=cache)
+        return logits[:, 0], cache
+
+    return decode_step
+
+
+def decode_cache_specs(cfg: ModelConfig, batch: int, mesh) -> Any:
+    """PartitionSpec tree for the decode cache (mirrors init_cache)."""
+    return shd.cache_specs(cfg, batch, mesh)
+
+
+def cache_shape(cfg: ModelConfig, batch: int, max_seq: int,
+                dtype=jnp.bfloat16) -> Any:
+    """ShapeDtypeStruct tree of the decode cache (no allocation)."""
+    return jax.eval_shape(
+        lambda: mdl.init_cache(cfg, batch, max_seq, dtype=dtype,
+                               img_tokens=cfg.n_img_tokens))

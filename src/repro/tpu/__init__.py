@@ -1,0 +1,2 @@
+"""HERMES-on-TPU memory-tier features: paged KV cache with tensor-aware
+eviction (kv_cache.py) and the host-DRAM offload tier (offload.py)."""

@@ -1,0 +1,217 @@
+"""Paged KV cache with tensor-aware, tiered page management.
+
+This is the serving-side realization of THREE HERMES techniques
+(DESIGN §1 Track B):
+
+  * tensor-aware caching — pages are scored by a reuse estimator
+    (exponentially-decayed access recency + pin class), so scheduler
+    pressure evicts STREAMING pages (long-finished prefixes) before
+    RESIDENT ones (system prompts shared by many sequences — the analogue
+    of the paper's pinned embedding rows);
+  * hybrid memory model — the page pool is two-tier: an HBM pool
+    (bandwidth tier, sized by ``hbm_budget_pages``) and a host-DRAM pool
+    (capacity tier).  Cold pages demote to host; hot pages promote back;
+  * ML-based prefetching — decode touches pages strictly left-to-right,
+    so the manager prefetches host-resident pages ``prefetch_ahead``
+    positions before the attention window reaches them (the known-future
+    analogue of the paper's perceptron predictor).
+
+The manager is deliberately numpy/host-side (it is control plane — page
+tables are tiny); the data plane is ``kernels/paged_attention`` over the
+device pool.  Unit + hypothesis tests in tests/test_kv_cache.py assert
+the invariants: no page leaks, no double allocation, lookups always hit
+HBM after prefetch, eviction order respects (pin, score).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+PIN_STREAMING = 0   # ordinary per-sequence context
+PIN_RESIDENT = 1    # shared prefixes (system prompts) — evict last
+
+
+@dataclasses.dataclass
+class PagePool:
+    """Physical page storage for one tier."""
+    n_pages: int
+    free: List[int] = dataclasses.field(default_factory=list)
+
+    def __post_init__(self):
+        self.free = list(range(self.n_pages))[::-1]
+
+    def alloc(self) -> Optional[int]:
+        return self.free.pop() if self.free else None
+
+    def release(self, page: int) -> None:
+        self.free.append(page)
+
+    @property
+    def n_free(self) -> int:
+        return len(self.free)
+
+
+@dataclasses.dataclass
+class PageMeta:
+    seq_id: int
+    logical: int               # logical page index within the sequence
+    tier: int                  # 0 = HBM, 1 = host
+    phys: int                  # physical index within its tier's pool
+    pin: int = PIN_STREAMING
+    score: float = 0.0         # reuse estimator (decayed access counter)
+    refs: int = 1              # sharing count (prefix sharing)
+
+
+class PagedKVManager:
+    """Control plane for a two-tier paged KV cache."""
+
+    def __init__(self, page_size: int, hbm_budget_pages: int,
+                 host_budget_pages: int, prefetch_ahead: int = 2,
+                 decay: float = 0.9):
+        self.page_size = page_size
+        self.hbm = PagePool(hbm_budget_pages)
+        self.host = PagePool(host_budget_pages)
+        self.prefetch_ahead = prefetch_ahead
+        self.decay = decay
+        # (seq_id, logical) -> PageMeta
+        self.pages: Dict[Tuple[int, int], PageMeta] = {}
+        self.seq_len: Dict[int, int] = {}
+        self.stats = {"evictions": 0, "demotions": 0, "promotions": 0,
+                      "hbm_hits": 0, "host_hits": 0, "allocs": 0}
+
+    # -- allocation -----------------------------------------------------------
+    def _evict_or_demote_one(self) -> bool:
+        """Free one HBM page: demote the worst (pin, score) victim."""
+        victims = [m for m in self.pages.values() if m.tier == 0]
+        if not victims:
+            return False
+        victim = min(victims, key=lambda m: (m.pin, m.score))
+        host_phys = self.host.alloc()
+        if host_phys is None:
+            return False
+        self.hbm.release(victim.phys)
+        victim.tier, victim.phys = 1, host_phys
+        self.stats["demotions"] += 1
+        return True
+
+    def append_token(self, seq_id: int, pin: int = PIN_STREAMING
+                     ) -> Tuple[int, int]:
+        """Grow sequence by one token; returns (logical_page, offset).
+
+        Allocates a new HBM page at page boundaries, demoting cold pages
+        if the HBM pool is exhausted.
+        """
+        pos = self.seq_len.get(seq_id, 0)
+        logical, offset = divmod(pos, self.page_size)
+        if offset == 0:
+            phys = self.hbm.alloc()
+            while phys is None:
+                if not self._evict_or_demote_one():
+                    raise MemoryError("KV pools exhausted")
+                phys = self.hbm.alloc()
+            self.pages[(seq_id, logical)] = PageMeta(
+                seq_id, logical, tier=0, phys=phys, pin=pin, score=1.0)
+            self.stats["allocs"] += 1
+        self.seq_len[seq_id] = pos + 1
+        return logical, offset
+
+    def share_prefix(self, src_seq: int, dst_seq: int, n_tokens: int) -> None:
+        """Prefix sharing: dst's first pages alias src's (copy-on-write is
+        out of scope — shared pages are read-only RESIDENT class)."""
+        n_pages = (n_tokens + self.page_size - 1) // self.page_size
+        for lp in range(n_pages):
+            meta = self.pages[(src_seq, lp)]
+            meta.refs += 1
+            meta.pin = PIN_RESIDENT
+            self.pages[(dst_seq, lp)] = meta
+        self.seq_len[dst_seq] = n_tokens
+
+    def free_seq(self, seq_id: int) -> None:
+        n_pages = (self.seq_len.pop(seq_id, 0)
+                   + self.page_size - 1) // self.page_size
+        for lp in range(n_pages):
+            meta = self.pages.pop((seq_id, lp), None)
+            if meta is None:
+                continue
+            meta.refs -= 1
+            if meta.refs <= 0:
+                (self.hbm if meta.tier == 0 else self.host).release(meta.phys)
+                self.stats["evictions"] += 1
+
+    # -- access + tier management ---------------------------------------------
+    def touch(self, seq_id: int, logical: int) -> PageMeta:
+        """Record an access (decode step reading this page)."""
+        meta = self.pages[(seq_id, logical)]
+        meta.score = meta.score * self.decay + 1.0
+        self.stats["hbm_hits" if meta.tier == 0 else "host_hits"] += 1
+        return meta
+
+    def decay_scores(self) -> None:
+        for meta in self.pages.values():
+            meta.score *= self.decay
+
+    def _promote(self, meta: PageMeta) -> bool:
+        phys = self.hbm.alloc()
+        while phys is None:
+            if not self._evict_or_demote_one():
+                return False
+            phys = self.hbm.alloc()
+        self.host.release(meta.phys)
+        meta.tier, meta.phys = 0, phys
+        # prefetch implies predicted imminent reuse — bump the score so
+        # the page is not the next demotion victim (thrash guard)
+        meta.score = meta.score * self.decay + 2.0
+        self.stats["promotions"] += 1
+        return True
+
+    def prefetch_for_decode(self, seq_id: int) -> List[int]:
+        """Promote host-tier pages the decode window will need soon.
+
+        Decode reads ALL pages of the sequence each step, so any host-
+        resident page of an active sequence is a future miss; we promote
+        up to ``prefetch_ahead`` per step (modelling bounded host→HBM
+        DMA bandwidth per step, overlapped with compute).
+        """
+        n_pages = (self.seq_len.get(seq_id, 0)
+                   + self.page_size - 1) // self.page_size
+        promoted = []
+        for lp in range(n_pages):
+            if len(promoted) >= self.prefetch_ahead:
+                break
+            meta = self.pages.get((seq_id, lp))
+            if meta is not None and meta.tier == 1:
+                if self._promote(meta):
+                    promoted.append(lp)
+        return promoted
+
+    # -- views ------------------------------------------------------------------
+    def page_table(self, seq_ids: List[int], max_pages: int) -> np.ndarray:
+        """(B, max_pages) physical HBM page per logical slot (-1 = absent /
+        host-tier — the data plane must prefetch first)."""
+        tbl = np.full((len(seq_ids), max_pages), -1, np.int32)
+        for b, sid in enumerate(seq_ids):
+            n_pages = (self.seq_len.get(sid, 0)
+                       + self.page_size - 1) // self.page_size
+            for lp in range(min(n_pages, max_pages)):
+                meta = self.pages.get((sid, lp))
+                if meta is not None and meta.tier == 0:
+                    tbl[b, lp] = meta.phys
+        return tbl
+
+    def check_invariants(self) -> None:
+        """Test hook: no double-allocation, no leaked pages."""
+        used_hbm = [m.phys for m in set(map(id, self.pages.values())) and
+                    {id(m): m for m in self.pages.values()}.values()
+                    if m.tier == 0]
+        used_host = [m.phys
+                     for m in {id(m): m for m in self.pages.values()}.values()
+                     if m.tier == 1]
+        assert len(used_hbm) == len(set(used_hbm)), "double-allocated HBM page"
+        assert len(used_host) == len(set(used_host)), "double-allocated host page"
+        assert not (set(used_hbm) & set(self.hbm.free)), "HBM page both used+free"
+        assert not (set(used_host) & set(self.host.free)), "host page used+free"
+        assert len(used_hbm) + self.hbm.n_free == self.hbm.n_pages, "HBM leak"
+        assert len(used_host) + self.host.n_free == self.host.n_pages, "host leak"

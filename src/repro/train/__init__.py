@@ -1,0 +1,2 @@
+from repro.train.step import (TrainState, build_train_step,  # noqa: F401
+                              init_train_state, train_state_specs)

@@ -1,0 +1,104 @@
+"""Production trainer: data prefetch × checkpoints × fault tolerance.
+
+Wires every runtime substrate together (the loop a 1000-node launcher
+would run on each controller):
+
+    loader  = PrefetchLoader(SyntheticLMDataset(...))   # data tier
+    step_fn = jit(build_train_step(cfg, rc))            # compute
+    ckpt    = CheckpointManager(...)                    # async, atomic
+    preempt = PreemptionHandler()                       # SIGTERM → save
+    monitor = StragglerMonitor()                        # deadline police
+
+Per step: start deadline clock → step → metrics → end clock; every
+``ckpt_every`` steps an async checkpoint; on preemption or persistent
+straggle, checkpoint synchronously and exit with a restart hint
+(the elastic topology proposer picks the new mesh).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, List, Optional
+
+import jax
+import numpy as np
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.configs.base import ModelConfig, RunConfig
+from repro.data.pipeline import PrefetchLoader, SyntheticLMDataset
+from repro.runtime.fault import PreemptionHandler, StragglerMonitor
+from repro.train.step import TrainState, build_train_step, init_train_state
+
+
+@dataclasses.dataclass
+class TrainResult:
+    state: TrainState
+    losses: List[float]
+    last_step: int
+    stopped_by: str              # "completed" | "preempted" | "straggler"
+
+
+def train(cfg: ModelConfig, rc: RunConfig, *, batch: int, seq: int,
+          steps: int, ckpt_dir: Optional[str] = None, ckpt_every: int = 50,
+          seed: int = 0, preempt: Optional[PreemptionHandler] = None,
+          log_every: int = 10, shardings=None,
+          state: Optional[TrainState] = None,
+          start_step: int = 0) -> TrainResult:
+    key = jax.random.PRNGKey(seed)
+    if state is None:
+        state = init_train_state(cfg, rc, key)
+    step_fn = jax.jit(build_train_step(cfg, rc, total_steps=steps),
+                      donate_argnums=(0,))
+
+    ckpt = CheckpointManager(ckpt_dir) if ckpt_dir else None
+    if ckpt is not None and ckpt.latest_step() is not None:
+        start_step, state = ckpt.restore(state)
+        start_step += 1
+    preempt = preempt or PreemptionHandler(install=False)
+    monitor = StragglerMonitor()
+
+    ds = SyntheticLMDataset(cfg, batch, seq, seed=seed)
+    loader = PrefetchLoader(ds, sharding=shardings, start_step=start_step)
+
+    losses: List[float] = []
+    stopped_by = "completed"
+    t_start = time.monotonic()
+    last_executed = start_step - 1
+    try:
+        for step, payload in loader:
+            if step >= steps:
+                break
+            last_executed = step
+            monitor.start_step(step)
+            batch_arrays = {k: jax.numpy.asarray(v)
+                            for k, v in payload.items()}
+            state, metrics = step_fn(state, batch_arrays)
+            loss = float(metrics["loss"])
+            losses.append(loss)
+            straggled = monitor.end_step()
+            if step % log_every == 0:
+                dt = time.monotonic() - t_start
+                tok_s = (step - start_step + 1) * batch * seq / max(dt, 1e-9)
+                print(f"[train] step {step:5d} loss {loss:.4f} "
+                      f"gnorm {float(metrics['grad_norm']):.3f} "
+                      f"tok/s {tok_s:,.0f}"
+                      + (" STRAGGLED" if straggled else ""))
+            if ckpt is not None and step and step % ckpt_every == 0:
+                ckpt.save(step, state)
+            if preempt.should_stop:
+                stopped_by = "preempted"
+                if ckpt is not None:
+                    ckpt.save(step, state, blocking=True)
+                break
+            if monitor.should_rebuild:
+                stopped_by = "straggler"
+                if ckpt is not None:
+                    ckpt.save(step, state, blocking=True)
+                break
+    finally:
+        loader.close()
+        if ckpt is not None:
+            ckpt.wait()
+    return TrainResult(state=state, losses=losses, last_step=last_executed,
+                       stopped_by=stopped_by)

@@ -1,0 +1,155 @@
+"""train_step: microbatched grad-accumulation + AdamW, GSPMD-sharded.
+
+Structure (DESIGN §4 "Microbatching"):
+
+  * the global batch (e.g. 256×4096) is reshaped to (n_micro, B_micro, S)
+    and consumed by a ``lax.scan`` — live activation memory is ONE
+    microbatch, and the lowered HLO is O(1) in both depth (model scan)
+    and microbatch count (accum scan);
+  * grads accumulate in fp32; params keep an fp32 master copy and are
+    cast to ``rc.compute_dtype`` once per step (the cast is inside the
+    scan body so the bf16 copy is transient per microbatch under remat);
+  * the optimizer update is purely elementwise on co-located shards
+    (optim/adamw.py);
+  * optional int8 gradient compression on the pod axis with error
+    feedback (dist/compression.py) — HERMES's "bandwidth tier" idea
+    applied to the slowest links (DCN).
+
+The returned step function is jit-compatible with donated state and is
+what launch/dryrun.py lowers for the 40-cell × 2-mesh matrix.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig, RunConfig
+from repro.dist import sharding as shd
+from repro.models import model as mdl
+from repro.optim.adafactor import (adafactor_init, adafactor_state_specs,
+                                   adafactor_update)
+from repro.optim.adamw import (AdamWState, adamw_init, adamw_update,
+                               opt_state_specs)
+from repro.optim.schedule import cosine_schedule
+
+
+@dataclasses.dataclass
+class TrainState:
+    params: Any            # fp32 master
+    opt: AdamWState
+    err: Any               # int8-compression error feedback (or () if off)
+
+
+jax.tree_util.register_dataclass(
+    TrainState, data_fields=["params", "opt", "err"], meta_fields=[])
+
+
+def init_train_state(cfg: ModelConfig, rc: RunConfig, key) -> TrainState:
+    params = mdl.init_params(cfg, key, dtype=jnp.dtype(rc.param_dtype))
+    opt_init = adafactor_init if rc.optimizer == "adafactor" else adamw_init
+    return TrainState(params=params, opt=opt_init(params, rc), err=())
+
+
+def train_state_specs(cfg: ModelConfig, rc: RunConfig) -> TrainState:
+    ps = shd.param_specs(cfg, fsdp_pod=rc.fsdp_pod)
+    opt = (adafactor_state_specs(ps) if rc.optimizer == "adafactor"
+           else opt_state_specs(ps))
+    return TrainState(params=ps, opt=opt, err=())
+
+
+def _xent(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    """Mean token cross-entropy; logits (..., V) possibly vocab-sharded."""
+    lf = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(lf, axis=-1)
+    gold = jnp.take_along_axis(lf, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(lse - gold)
+
+
+def build_train_step(cfg: ModelConfig, rc: RunConfig,
+                     total_steps: int = 10_000):
+    """Returns step(state, batch) → (state, metrics)."""
+
+    cdt = jnp.dtype(rc.compute_dtype)
+
+    def loss_fn(params_master, tokens, labels, img_embed):
+        params_c = jax.tree.map(lambda p: p.astype(cdt) if
+                                jnp.issubdtype(p.dtype, jnp.floating) else p,
+                                params_master)
+        logits, _, metrics = mdl.forward(params_c, cfg, rc, tokens,
+                                         img_embed=img_embed)
+        loss = _xent(logits, labels)
+        total = loss
+        if cfg.n_experts:
+            total = total + cfg.router_aux_weight * metrics["moe_aux"]
+        return total, (loss, metrics)
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def step(state: TrainState, batch: Dict[str, jax.Array]
+             ) -> Tuple[TrainState, Dict[str, jax.Array]]:
+        tokens, labels = batch["tokens"], batch["labels"]
+        img = batch.get("img_embed")
+        n_micro = rc.microbatches
+        B = tokens.shape[0]
+        assert B % n_micro == 0, (B, n_micro)
+        bm = B // n_micro
+
+        def micro_split(x):
+            if x is None:
+                return None
+            x = x.reshape((n_micro, bm) + x.shape[1:])
+            return shd.constrain_tree(x, P(None, shd.BATCH))
+
+        tok_m, lab_m = micro_split(tokens), micro_split(labels)
+        img_m = micro_split(img)
+
+        gdt = jnp.dtype(rc.grad_dtype)
+        g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, gdt), state.params)
+
+        def accum(carry, xs):
+            g_acc, loss_acc, aux_acc = carry
+            if img_m is None:
+                tok, lab = xs
+                im = None
+            else:
+                tok, lab, im = xs
+            (_, (loss, metrics)), grads = grad_fn(state.params, tok, lab, im)
+            g_acc = jax.tree.map(
+                lambda a, g: a + g.astype(gdt) / n_micro,
+                g_acc, grads)
+            aux = metrics.get("moe_drop_frac", jnp.zeros((), jnp.float32))
+            return (g_acc, loss_acc + loss / n_micro, aux_acc + aux / n_micro), None
+
+        xs = (tok_m, lab_m) if img_m is None else (tok_m, lab_m, img_m)
+        (grads, loss, drop), _ = jax.lax.scan(
+            accum, (g0, jnp.zeros((), jnp.float32),
+                    jnp.zeros((), jnp.float32)), xs)
+
+        err = state.err
+        if rc.grad_compression == "int8":
+            from repro.dist.compression import compress_grads_pod
+            grads, err = compress_grads_pod(grads, err)
+
+        lr = cosine_schedule(state.opt.step, rc.learning_rate,
+                             total=total_steps)
+        opt_update = (adafactor_update if rc.optimizer == "adafactor"
+                      else adamw_update)
+        new_params, new_opt, opt_metrics = opt_update(
+            state.params, grads, state.opt, rc, lr=lr)
+        metrics = {"loss": loss, "moe_drop_frac": drop, **opt_metrics}
+        return TrainState(new_params, new_opt, err), metrics
+
+    return step
+
+
+# -- convenience: spec trees for jit in/out shardings -----------------------
+def batch_specs(cfg: ModelConfig) -> Dict[str, P]:
+    out = {"tokens": P(shd.BATCH), "labels": P(shd.BATCH)}
+    if cfg.family == "vlm":
+        out["img_embed"] = P(shd.BATCH, None, None)
+    return out

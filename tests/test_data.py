@@ -1,0 +1,67 @@
+"""Data pipeline: determinism, learnable structure, prefetch ordering."""
+
+import numpy as np
+import pytest
+
+from repro.configs.registry import SMOKES
+from repro.data.pipeline import PrefetchLoader, SyntheticLMDataset
+
+
+def test_batch_deterministic_per_step():
+    cfg = SMOKES["gemma-2b"]
+    ds1 = SyntheticLMDataset(cfg, batch=4, seq=32, seed=7)
+    ds2 = SyntheticLMDataset(cfg, batch=4, seq=32, seed=7)
+    b1, b2 = ds1.batch_at(5), ds2.batch_at(5)
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+    assert not np.array_equal(ds1.batch_at(6)["tokens"], b1["tokens"])
+
+
+def test_labels_are_shifted_tokens():
+    cfg = SMOKES["gemma-2b"]
+    ds = SyntheticLMDataset(cfg, batch=2, seq=16)
+    b = ds.batch_at(0)
+    np.testing.assert_array_equal(b["labels"][:, :-1], b["tokens"][:, 1:])
+
+
+def test_stream_has_bigram_structure():
+    """The Markov component makes next-token entropy < unigram entropy —
+    the signal the integration test's loss decrease relies on."""
+    cfg = SMOKES["gemma-2b"]
+    ds = SyntheticLMDataset(cfg, batch=64, seq=64, seed=0)
+    toks = ds.batch_at(0)["tokens"]
+    pairs = set()
+    for row in toks:
+        pairs.update(zip(row[:-1], row[1:]))
+    # with 75% Markov follows into 4 successors, distinct bigrams per
+    # token is far below vocab-size-random
+    n_prev = len(set(toks[:, :-1].ravel().tolist()))
+    assert len(pairs) < 8 * n_prev
+
+
+def test_audio_stream_has_codebook_axis():
+    cfg = SMOKES["musicgen-large"]
+    ds = SyntheticLMDataset(cfg, batch=2, seq=8)
+    assert ds.batch_at(0)["tokens"].shape == (2, 8, cfg.n_codebooks)
+
+
+def test_prefetch_loader_yields_in_order():
+    cfg = SMOKES["gemma-2b"]
+    ds = SyntheticLMDataset(cfg, batch=2, seq=8)
+    loader = PrefetchLoader(ds, depth=2, start_step=3)
+    try:
+        steps = [next(loader)[0] for _ in range(5)]
+        assert steps == [3, 4, 5, 6, 7]
+    finally:
+        loader.close()
+
+
+def test_prefetch_loader_matches_dataset():
+    cfg = SMOKES["gemma-2b"]
+    ds = SyntheticLMDataset(cfg, batch=2, seq=8, seed=1)
+    loader = PrefetchLoader(ds, depth=2)
+    try:
+        step, batch = next(loader)
+        np.testing.assert_array_equal(batch["tokens"],
+                                      ds.batch_at(step)["tokens"])
+    finally:
+        loader.close()

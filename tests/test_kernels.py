@@ -1,0 +1,97 @@
+"""Per-kernel shape/dtype sweeps vs the pure-jnp oracles (interpret mode)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 \
+        else dict(rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("M,N,K,bm,bn,bk", [
+    (128, 128, 128, 64, 64, 64),
+    (256, 128, 512, 64, 128, 128),
+    (64, 192, 128, 64, 64, 64),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_matmul_prefetch(M, N, K, bm, bn, bk, dtype):
+    a = jax.random.normal(KEY, (M, K), dtype)
+    b = jax.random.normal(jax.random.PRNGKey(1), (K, N), dtype)
+    out = ops.matmul(a, b, bm=bm, bn=bn, bk=bk)
+    want = ref.matmul_ref(a, b)
+    np.testing.assert_allclose(out.astype(np.float32),
+                               want.astype(np.float32), **_tol(dtype))
+
+
+@pytest.mark.parametrize("S,Hq,Hkv,D,bq,bkv", [
+    (128, 4, 4, 32, 64, 64),     # MHA
+    (128, 8, 2, 32, 64, 32),     # GQA
+    (256, 4, 1, 64, 64, 128),    # MQA
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_kernel(S, Hq, Hkv, D, bq, bkv, dtype):
+    from repro.models.flash import flash_attention_ref
+    B = 2
+    q = jax.random.normal(KEY, (B, S, Hq, D), dtype)
+    k = jax.random.normal(jax.random.PRNGKey(1), (B, S, Hkv, D), dtype)
+    v = jax.random.normal(jax.random.PRNGKey(2), (B, S, Hkv, D), dtype)
+    out = ops.flash_attention(q, k, v, bq=bq, bkv=bkv)
+    want = flash_attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(out.astype(np.float32),
+                               want.astype(np.float32), **_tol(dtype))
+
+
+@pytest.mark.parametrize("B,H,Hkv,D,page,n_pool,mp", [
+    (2, 4, 2, 32, 16, 8, 3),
+    (1, 8, 8, 16, 8, 16, 5),
+    (3, 4, 1, 64, 32, 6, 2),
+])
+def test_paged_attention(B, H, Hkv, D, page, n_pool, mp):
+    rng = np.random.default_rng(0)
+    q = jax.random.normal(KEY, (B, H, D), jnp.float32)
+    kp = jax.random.normal(jax.random.PRNGKey(1), (n_pool, page, Hkv, D),
+                           jnp.float32)
+    vp = jax.random.normal(jax.random.PRNGKey(2), (n_pool, page, Hkv, D),
+                           jnp.float32)
+    # random page tables without repeats per sequence
+    tbl = np.stack([rng.permutation(n_pool)[:mp] for _ in range(B)])
+    lens = rng.integers(1, page * mp + 1, size=B)
+    out = ops.paged_attention(q, kp, vp, jnp.asarray(tbl, jnp.int32),
+                              jnp.asarray(lens, jnp.int32))
+    want = ref.paged_attention_ref(q, kp, vp, jnp.asarray(tbl),
+                                   jnp.asarray(lens))
+    np.testing.assert_allclose(out, want, rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("B,L,Dn,N,bd,chunk", [
+    (2, 64, 32, 8, 16, 16),
+    (1, 128, 64, 16, 32, 64),
+    (2, 96, 16, 4, 16, 32),
+])
+def test_mamba_scan(B, L, Dn, N, bd, chunk):
+    a = jax.random.uniform(KEY, (B, L, Dn, N), jnp.float32, 0.5, 0.999)
+    bx = jax.random.normal(jax.random.PRNGKey(1), (B, L, Dn, N)) * 0.1
+    c = jax.random.normal(jax.random.PRNGKey(2), (B, L, N))
+    out = ops.mamba_scan(a, bx, c, bd=bd, chunk=chunk)
+    want = ref.mamba_scan_ref(a, bx, c)
+    np.testing.assert_allclose(out, want, rtol=5e-4, atol=5e-5)
+
+
+def test_mamba_scan_matches_model_mamba1():
+    """The kernel's recurrence is the same one models/ssm.mamba1 uses."""
+    from repro.models.ssm import _mamba1_scan_chunked
+    B, L, Dn, N = 1, 32, 8, 4
+    a = jax.random.uniform(KEY, (B, L, Dn, N), jnp.float32, 0.5, 0.99)
+    bx = jax.random.normal(jax.random.PRNGKey(1), (B, L, Dn, N)) * 0.1
+    h, _ = _mamba1_scan_chunked(a, bx, chunk=8)
+    c = jax.random.normal(jax.random.PRNGKey(2), (B, L, N))
+    want = jnp.einsum("bldn,bln->bld", h, c)
+    got = ops.mamba_scan(a, bx, c, bd=8, chunk=8)
+    np.testing.assert_allclose(got, want, rtol=5e-4, atol=5e-5)

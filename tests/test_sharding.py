@@ -1,0 +1,106 @@
+"""Sharding spec trees must match the parameter/cache pytrees exactly,
+and every spec must be realizable on the production meshes (structure
+checked here; full realizability is proven by the dry-run artifacts)."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import SHAPES, RunConfig
+from repro.configs.registry import ARCH_IDS, ARCHS, SMOKES
+from repro.dist import sharding as shd
+from repro.models import model as mdl
+from repro.optim.adafactor import adafactor_init, adafactor_state_specs
+from repro.train.step import init_train_state, train_state_specs
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _is_spec(x):
+    return isinstance(x, P)
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_param_specs_structure_matches(arch):
+    cfg = SMOKES[arch]
+    params = jax.eval_shape(lambda: mdl.init_params(cfg, KEY))
+    specs = shd.param_specs(cfg)
+    ps = jax.tree.structure(params)
+    ss = jax.tree.structure(specs, is_leaf=_is_spec)
+    assert ps == ss, f"{arch}: param tree != spec tree"
+    # every spec's rank must not exceed its leaf's rank
+    for leaf, spec in zip(jax.tree.leaves(params),
+                          jax.tree.leaves(specs, is_leaf=_is_spec)):
+        assert len(spec) <= leaf.ndim, (arch, leaf.shape, spec)
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_full_param_dims_divisible_on_production_mesh(arch):
+    """FULL configs: every sharded dim must divide by its axis size
+    (16/16) — pjit I/O requires exact divisibility."""
+    cfg = ARCHS[arch]
+    params = jax.eval_shape(lambda: mdl.init_params(cfg, KEY))
+    specs = shd.param_specs(cfg)
+    sizes = {"data": 16, "model": 16, "pod": 2}
+    for (path, leaf), spec in zip(
+            jax.tree_util.tree_flatten_with_path(params)[0],
+            jax.tree.leaves(specs, is_leaf=_is_spec)):
+        for dim, names in enumerate(spec):
+            if names is None:
+                continue
+            names = (names,) if isinstance(names, str) else names
+            n = 1
+            for a in names:
+                n *= sizes[a]
+            assert leaf.shape[dim] % n == 0, (arch, path, leaf.shape,
+                                              spec, dim)
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_cache_specs_structure_matches(arch):
+    cfg = SMOKES[arch]
+    cache = jax.eval_shape(lambda: mdl.init_cache(cfg, 4, 32))
+
+    class FakeMesh:
+        axis_names = ("data", "model")
+        shape = {"data": 2, "model": 2}
+    specs = shd.cache_specs(cfg, 4, FakeMesh())
+    cs = jax.tree.structure(cache)
+    ss = jax.tree.structure(specs, is_leaf=_is_spec)
+    assert cs == ss, f"{arch}: cache tree != cache spec tree"
+
+
+@pytest.mark.parametrize("arch", ["llama3-405b", "gemma-2b",
+                                  "qwen3-moe-235b-a22b"])
+def test_opt_state_specs_match(arch):
+    cfg = SMOKES[arch]
+    for opt in ("adamw", "adafactor"):
+        rc = RunConfig(optimizer=opt, microbatches=1, remat="none")
+        state = jax.eval_shape(
+            lambda rc=rc: init_train_state(cfg, rc, KEY))
+        specs = train_state_specs(cfg, rc)
+        assert (jax.tree.structure(state)
+                == jax.tree.structure(specs, is_leaf=_is_spec)), \
+            f"{arch}/{opt}"
+
+
+def test_filter_spec_drops_missing_axes():
+    s = shd.filter_spec(P(("pod", "data"), "model"), ("data", "model"))
+    assert s == P(("data",), "model")
+    s = shd.filter_spec(P("pod", None), ("data", "model"))
+    assert s == P(None, None)
+
+
+def test_fsdp_pod_repoints_data_dims():
+    cfg = SMOKES["llama3-405b"]
+    base = shd.param_specs(cfg)
+    podded = shd.param_specs(cfg, fsdp_pod=True)
+    b = jax.tree.leaves(base, is_leaf=_is_spec)
+    p = jax.tree.leaves(podded, is_leaf=_is_spec)
+    changed = sum(x != y for x, y in zip(b, p))
+    assert changed > 0
+    for x, y in zip(b, p):
+        for dx, dy in zip(x, y):
+            if dx == "data":
+                assert dy == ("pod", "data")

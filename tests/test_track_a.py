@@ -1,0 +1,163 @@
+"""Unit tests for the Track-A simulator substrate (caches, MESI,
+prefetchers, hybrid memory, energy)."""
+
+import numpy as np
+import pytest
+
+from repro.core.cache import Cache, MODIFIED
+from repro.core.coherence import MESIDirectory
+from repro.core.hybrid_memory import Channel, HybridMemory
+from repro.core.params import (CacheParams, HybridMemParams,
+                               MemChannelParams, PrefetchParams)
+from repro.core.prefetch import MLPrefetcher, PrefetchUnit, StridePrefetcher
+from repro.core.tensor_cache import (REUSE_RESIDENT, REUSE_STREAMING,
+                                     TensorAwarePolicy)
+
+
+def _cache(size=4096, assoc=4, policy="lru"):
+    return Cache(CacheParams("T", size, assoc, hit_latency=1, policy=policy))
+
+
+class TestCache:
+    def test_hit_after_fill(self):
+        c = _cache()
+        assert c.lookup(0x1000, 0, False) is None
+        c.insert(0x1000, tensor_id=0, reuse_class=1, now=0)
+        assert c.lookup(0x1000, 1, False) is not None
+        assert c.hits == 1 and c.misses == 1
+
+    def test_eviction_at_capacity(self):
+        c = _cache(size=1024, assoc=2)   # 8 sets × 2 ways × 64B
+        set_stride = 64 * 8              # same-set addresses
+        victims = 0
+        for i in range(4):
+            if c.insert(i * set_stride, 0, 1, now=i) is not None:
+                victims += 1
+        assert victims == 2              # 2-way set overflows twice
+
+    def test_lru_order(self):
+        c = _cache(size=1024, assoc=2)
+        s = 64 * 8
+        c.insert(0 * s, 0, 1, now=0)
+        c.insert(1 * s, 0, 1, now=1)
+        c.lookup(0 * s, 2, False)        # touch way 0 → way 1 is LRU
+        victim = c.insert(2 * s, 0, 1, now=3)
+        assert victim is not None and victim[0] == 1 * s
+
+    def test_write_marks_dirty_modified(self):
+        c = _cache()
+        c.insert(0x40, 0, 1, now=0, is_write=True)
+        line = c.probe(0x40)
+        assert line.dirty and line.state == MODIFIED
+
+
+class TestTensorAwarePolicy:
+    def test_streaming_evicted_before_resident(self):
+        c = _cache(size=1024, assoc=2, policy="tensor_aware")
+        s = 64 * 8
+        c.insert(0 * s, tensor_id=1, reuse_class=REUSE_RESIDENT, now=0)
+        c.insert(1 * s, tensor_id=2, reuse_class=REUSE_STREAMING, now=1)
+        # resident line is older (LRU would evict it); TA must not
+        for i in range(5):               # give the resident line utility
+            c.lookup(0 * s, 2 + i, False)
+        victim = c.insert(2 * s, tensor_id=1, reuse_class=REUSE_RESIDENT,
+                          now=10)
+        assert victim is not None and victim[0] == 1 * s
+
+    def test_utility_monitor_decay(self):
+        p = TensorAwarePolicy()
+
+        class L:                          # minimal line stub
+            tensor_id = 7
+        for _ in range(100):
+            p.on_fill(L, block=-1)
+            p.on_hit(L)
+        u_before = p.utility(7)
+        for _ in range(20000):            # force decay cycles
+            p.on_fill(L, block=-1)
+        assert p.utility(7) < u_before
+
+
+class TestMESI:
+    def test_write_invalidates_sharers(self):
+        d = MESIDirectory(3)
+        d.on_read(10, 0)
+        d.on_read(10, 1)
+        n_inv = d.on_write(10, 2)
+        assert n_inv == 2
+        assert d.sharers(10) == 1
+
+    def test_c2c_on_read_of_owned(self):
+        d = MESIDirectory(2)
+        d.on_write(5, 0)                  # owner = 0 (M)
+        provider = d.on_read(5, 1)
+        assert provider == 0
+        assert d.c2c_transfers == 1
+
+    def test_evict_clears(self):
+        d = MESIDirectory(2)
+        d.on_read(3, 0)
+        d.on_evict(3, 0)
+        assert d.sharers(3) == 0
+
+
+class TestPrefetchers:
+    def test_stride_detects_constant_stride(self):
+        p = StridePrefetcher(PrefetchParams(enabled=True, degree=2), 64)
+        issued = []
+        for i in range(8):
+            issued += p.observe(pc=1, addr=0x1000 + i * 128)
+        assert issued                      # fired after confidence
+        assert issued[-1] - issued[-2] == 128
+
+    def test_stride_resets_on_changed_stride(self):
+        p = StridePrefetcher(PrefetchParams(enabled=True), 64)
+        for i in range(8):
+            p.observe(pc=1, addr=0x1000 + i * 128)
+        before = p.issued
+        p.observe(pc=1, addr=0x9000)       # stride break
+        p.observe(pc=1, addr=0x9040)
+        assert p.issued == before          # needs confidence again
+
+    def test_ml_learns_repeating_delta_pattern(self):
+        p = MLPrefetcher(PrefetchParams(enabled=True, ml_enabled=True), 64)
+        # period-3 delta pattern: +1, +2, +5 blocks
+        addr, out = 0, []
+        deltas = [1, 2, 5] * 60
+        for d in deltas:
+            addr += d * 64
+            out += p.observe(pc=3, addr=addr)
+        assert p.issued > 10               # predictor engaged
+        assert p.trained > 0
+
+
+class TestHybridMemory:
+    def _mem(self, hot=4):
+        dram = MemChannelParams("d", 1 << 30, base_latency=100,
+                                bandwidth_bytes_per_cycle=8, row_hit_latency=30)
+        hbm = MemChannelParams("h", 1 << 22, base_latency=50,
+                               bandwidth_bytes_per_cycle=64, row_hit_latency=15)
+        return HybridMemory(dram, hbm,
+                            HybridMemParams(enabled=True, hot_threshold=hot,
+                                            window=64))
+
+    def test_hot_page_migrates(self):
+        m = self._mem()
+        for i in range(4000):
+            m.access(float(i * 10), 0x2000 + (i % 8) * 8, 64)
+        assert m.migrations >= 1
+        assert m.page_loc.get(0x2000 // 4096) == 1
+
+    def test_cold_stream_stays_in_dram(self):
+        m = self._mem()
+        for i in range(2000):
+            m.access(float(i * 10), i * 4096, 64)   # one touch per page
+        assert m.migrations == 0
+
+    def test_channel_queueing_latency(self):
+        ch = Channel(MemChannelParams("d", 1 << 30, base_latency=100,
+                                      bandwidth_bytes_per_cycle=1,
+                                      row_hit_latency=30))
+        _, l1 = ch.access(0.0, 0, 64)
+        _, l2 = ch.access(0.0, 4096, 64)   # queued behind the first
+        assert l2 > l1
