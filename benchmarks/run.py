@@ -1,9 +1,15 @@
 """Benchmark harness: one entry per paper table + roofline + kernels.
 
     PYTHONPATH=src python -m benchmarks.run [--scale S] [--skip-tables]
+    PYTHONPATH=src python -m benchmarks.run --smoke   # CI: seconds
+
+``--smoke`` runs the paper tables at a tiny scale on the SoA engine plus
+the engine-throughput bench, and skips the jax kernel/roofline suites —
+a seconds-long end-to-end check for CI.
 
 Prints ``name,us_per_call,derived`` CSV lines per bench plus the
-paper-table comparisons and the 40-cell roofline report.
+paper-table comparisons and the 40-cell roofline report; the engine
+bench also writes machine-readable ``BENCH_sim.json``.
 """
 
 from __future__ import annotations
@@ -13,16 +19,34 @@ import argparse
 
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--scale", type=float, default=1.0,
-                    help="Track-A workload scale (1.0 = paper scale)")
+    ap.add_argument("--scale", type=float, default=None,
+                    help="Track-A workload scale (default: 1.0, the "
+                         "paper scale; 0.02 under --smoke)")
+    ap.add_argument("--engine", default="soa", choices=["soa", "object"],
+                    help="simulation engine for the tables")
+    ap.add_argument("--processes", type=int, default=None,
+                    help="worker processes for table cells (default: auto)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny-scale CI run: tables + engine bench only")
     ap.add_argument("--skip-tables", action="store_true")
     ap.add_argument("--skip-kernels", action="store_true")
     args = ap.parse_args()
 
-    from benchmarks import kernel_micro, roofline, tables
+    from benchmarks import tables
 
+    if args.smoke:
+        # explicit --scale/--engine still apply under --smoke
+        scale = args.scale if args.scale is not None else 0.02
+        tables.run(scale=scale, engine=args.engine,
+                   processes=args.processes, bench_scale=scale)
+        return
+
+    from benchmarks import kernel_micro, roofline
+
+    scale = args.scale if args.scale is not None else 1.0
     if not args.skip_tables:
-        tables.run(scale=args.scale)
+        tables.run(scale=scale, engine=args.engine,
+                   processes=args.processes)
     roofline.run()
     if not args.skip_kernels:
         kernel_micro.run()

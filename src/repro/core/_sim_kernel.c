@@ -1,0 +1,1246 @@
+/* Structure-of-arrays simulation kernel (compiled twin of engine_soa.py).
+ *
+ * Bit-identical to the Python reference engine: every float operation is
+ * performed in the same order on IEEE doubles (build with -ffp-contract=off
+ * and NO -ffast-math so the compiler cannot fuse or reorder), every
+ * tie-break that the reference inherits from Python dict insertion order
+ * is reproduced via explicit fill-sequence numbers or insertion-ordered
+ * scans, and every bounded table replicates the exact eviction order
+ * (FIFO of oldest-still-present, like dict.pop(next(iter(d)))).
+ *
+ * State is pure structure-of-arrays: per cache level, flat columns
+ * (tag/valid/dirty/tensor/reuse/last/pref/ready/seq) indexed by
+ * (instance*sets + set)*assoc + way.  Compiled and loaded via ctypes by
+ * core/native.py; equivalence vs the reference engine is enforced by
+ * tests/test_simulator_equiv.py for every preset x workload.
+ */
+
+#include <stdint.h>
+#include <stdlib.h>
+#include <string.h>
+
+/* ------------------------------------------------------------------ */
+/* open-addressing int64 -> int64[nv] map (linear probe, backshift del) */
+/* ------------------------------------------------------------------ */
+typedef struct {
+    int64_t *keys;
+    int64_t *vals;   /* nv per entry */
+    uint8_t *used;
+    int64_t cap, count, mask;
+    int nv;
+} Map;
+
+static uint64_t hash64(uint64_t x) {
+    x ^= x >> 33; x *= 0xff51afd7ed558ccdULL;
+    x ^= x >> 33; x *= 0xc4ceb9fe1a85ec53ULL;
+    x ^= x >> 33; return x;
+}
+
+static void map_init(Map *m, int64_t cap, int nv) {
+    int64_t c = 16;
+    while (c < cap * 2) c <<= 1;
+    m->cap = c; m->mask = c - 1; m->count = 0; m->nv = nv;
+    m->keys = malloc(c * sizeof(int64_t));
+    m->vals = malloc(c * (int64_t)nv * sizeof(int64_t));
+    m->used = calloc(c, 1);
+}
+
+static void map_free(Map *m) { free(m->keys); free(m->vals); free(m->used); }
+
+static int64_t *map_get(Map *m, int64_t key) {
+    int64_t i = hash64((uint64_t)key) & m->mask;
+    while (m->used[i]) {
+        if (m->keys[i] == key) return m->vals + i * m->nv;
+        i = (i + 1) & m->mask;
+    }
+    return 0;
+}
+
+static void map_grow(Map *m);
+
+static int64_t *map_put(Map *m, int64_t key) {
+    /* returns value slot (zeroed if new) */
+    if (m->count * 10 >= m->cap * 7) map_grow(m);
+    int64_t i = hash64((uint64_t)key) & m->mask;
+    while (m->used[i]) {
+        if (m->keys[i] == key) return m->vals + i * m->nv;
+        i = (i + 1) & m->mask;
+    }
+    m->used[i] = 1; m->keys[i] = key; m->count++;
+    memset(m->vals + i * m->nv, 0, m->nv * sizeof(int64_t));
+    return m->vals + i * m->nv;
+}
+
+static void map_grow(Map *m) {
+    Map n;
+    map_init(&n, m->cap, m->nv);   /* doubles (cap*2 rounding) */
+    for (int64_t i = 0; i < m->cap; i++)
+        if (m->used[i]) {
+            int64_t *v = map_put(&n, m->keys[i]);
+            memcpy(v, m->vals + i * m->nv, m->nv * sizeof(int64_t));
+        }
+    map_free(m);
+    *m = n;
+}
+
+static void map_del(Map *m, int64_t key) {
+    int64_t i = hash64((uint64_t)key) & m->mask;
+    while (m->used[i]) {
+        if (m->keys[i] == key) break;
+        i = (i + 1) & m->mask;
+    }
+    if (!m->used[i]) return;
+    /* backshift deletion keeps probe chains intact */
+    int64_t j = i;
+    for (;;) {
+        j = (j + 1) & m->mask;
+        if (!m->used[j]) break;
+        int64_t home = hash64((uint64_t)m->keys[j]) & m->mask;
+        /* can entry j move into slot i? */
+        int64_t d_cur = (j - home) & m->mask;
+        int64_t d_new = (i - home) & m->mask;
+        if (d_new <= d_cur) {
+            m->keys[i] = m->keys[j];
+            memcpy(m->vals + i * m->nv, m->vals + j * m->nv,
+                   m->nv * sizeof(int64_t));
+            i = j;
+        }
+    }
+    m->used[i] = 0;
+    m->count--;
+}
+
+/* ------------------------------------------------------------------ */
+/* FIFO-capped map: replicates Python dict.pop(next(iter(d))) eviction  */
+/* (oldest key still present).  Value slot 0 holds the entry stamp;     */
+/* user values live in slots 1..nv.                                     */
+/* ------------------------------------------------------------------ */
+typedef struct {
+    Map m;             /* key -> [stamp, uservals...] */
+    int64_t *ring_k, *ring_s;
+    int64_t head, tail, ring_cap;
+    int64_t stamp;
+} Fifo;
+
+static void fifo_init(Fifo *f, int64_t cap_hint, int nuser) {
+    map_init(&f->m, cap_hint, nuser + 1);
+    f->ring_cap = cap_hint * 4 + 64;
+    f->ring_k = malloc(f->ring_cap * sizeof(int64_t));
+    f->ring_s = malloc(f->ring_cap * sizeof(int64_t));
+    f->head = f->tail = 0;
+    f->stamp = 1;
+}
+
+static void fifo_free(Fifo *f) {
+    map_free(&f->m); free(f->ring_k); free(f->ring_s);
+}
+
+static int64_t fifo_len(Fifo *f) { return f->m.count; }
+
+static int64_t *fifo_get(Fifo *f, int64_t key) {
+    int64_t *v = map_get(&f->m, key);
+    return v ? v + 1 : 0;
+}
+
+static void fifo_push_ring(Fifo *f, int64_t key, int64_t stamp) {
+    if (f->tail == f->ring_cap) {
+        /* compact: drop stale entries, keep order */
+        int64_t w = 0;
+        for (int64_t i = f->head; i < f->tail; i++) {
+            int64_t *v = map_get(&f->m, f->ring_k[i]);
+            if (v && v[0] == f->ring_s[i]) {
+                f->ring_k[w] = f->ring_k[i];
+                f->ring_s[w] = f->ring_s[i];
+                w++;
+            }
+        }
+        f->head = 0; f->tail = w;
+        if (f->tail * 2 > f->ring_cap) {      /* genuinely full: grow */
+            f->ring_cap *= 2;
+            f->ring_k = realloc(f->ring_k, f->ring_cap * sizeof(int64_t));
+            f->ring_s = realloc(f->ring_s, f->ring_cap * sizeof(int64_t));
+        }
+    }
+    f->ring_k[f->tail] = key;
+    f->ring_s[f->tail] = stamp;
+    f->tail++;
+}
+
+/* insert-or-update; present keys keep their stamp (dict order) */
+static int64_t *fifo_put(Fifo *f, int64_t key) {
+    int64_t *v = map_get(&f->m, key);
+    if (v) return v + 1;
+    v = map_put(&f->m, key);
+    v[0] = f->stamp;
+    fifo_push_ring(f, key, f->stamp);
+    f->stamp++;
+    return v + 1;
+}
+
+/* remove by key (dict.pop(key)); returns 1 + copies user vals out */
+static int fifo_pop_key(Fifo *f, int64_t key, int64_t *out, int nuser) {
+    int64_t *v = map_get(&f->m, key);
+    if (!v) return 0;
+    if (out) memcpy(out, v + 1, nuser * sizeof(int64_t));
+    map_del(&f->m, key);
+    return 1;
+}
+
+/* evict oldest-still-present; returns 1 + key/user vals */
+static int fifo_evict_oldest(Fifo *f, int64_t *key_out, int64_t *out,
+                             int nuser) {
+    while (f->head < f->tail) {
+        int64_t k = f->ring_k[f->head];
+        int64_t *v = map_get(&f->m, k);
+        if (v && v[0] == f->ring_s[f->head]) {
+            f->head++;
+            if (key_out) *key_out = k;
+            if (out) memcpy(out, v + 1, nuser * sizeof(int64_t));
+            map_del(&f->m, k);
+            return 1;
+        }
+        f->head++;                         /* stale: skip */
+    }
+    return 0;
+}
+
+/* ------------------------------------------------------------------ */
+/* markov table: (pc, d1, d2) -> up to 9 (delta, count) pairs held in   */
+/* insertion order (Python dict semantics for min/max tie-breaks).      */
+/* ------------------------------------------------------------------ */
+typedef struct {
+    int64_t k1, k2, k3;
+    int cnt;
+    int64_t deltas[9];
+    int64_t counts[9];
+} MkEntry;
+
+typedef struct {
+    MkEntry *e;
+    uint8_t *used;
+    int64_t cap, count, mask;
+} MkMap;
+
+static void mk_init(MkMap *m, int64_t cap) {
+    int64_t c = 64;
+    while (c < cap * 2) c <<= 1;
+    m->cap = c; m->mask = c - 1; m->count = 0;
+    m->e = malloc(c * sizeof(MkEntry));
+    m->used = calloc(c, 1);
+}
+
+static void mk_free(MkMap *m) { free(m->e); free(m->used); }
+
+static uint64_t mk_hash(int64_t a, int64_t b, int64_t c) {
+    return hash64((uint64_t)a * 0x9e3779b97f4a7c15ULL
+                  ^ hash64((uint64_t)b) ^ (hash64((uint64_t)c) << 1));
+}
+
+static MkEntry *mk_find(MkMap *m, int64_t a, int64_t b, int64_t c,
+                        int create) {
+    if (create && m->count * 10 >= m->cap * 7) {
+        MkMap n;
+        mk_init(&n, m->cap);
+        for (int64_t i = 0; i < m->cap; i++)
+            if (m->used[i]) {
+                MkEntry *src = &m->e[i];
+                MkEntry *dst = mk_find(&n, src->k1, src->k2, src->k3, 1);
+                *dst = *src;
+            }
+        mk_free(m);
+        *m = n;
+    }
+    int64_t i = mk_hash(a, b, c) & m->mask;
+    while (m->used[i]) {
+        MkEntry *en = &m->e[i];
+        if (en->k1 == a && en->k2 == b && en->k3 == c) return en;
+        i = (i + 1) & m->mask;
+    }
+    if (!create) return 0;
+    m->used[i] = 1; m->count++;
+    MkEntry *en = &m->e[i];
+    en->k1 = a; en->k2 = b; en->k3 = c; en->cnt = 0;
+    return en;
+}
+
+/* ------------------------------------------------------------------ */
+/* floor division (Python // semantics for possibly-negative values)    */
+/* ------------------------------------------------------------------ */
+static inline int64_t fdiv(int64_t a, int64_t b) {
+    int64_t q = a / b;
+    if ((a % b != 0) && ((a < 0) != (b < 0))) q--;
+    return q;
+}
+
+/* Python (v * 2654435761) % m with non-negative result */
+static inline int64_t pmod_hash(int64_t v, int64_t m) {
+    int64_t r = (v * 2654435761LL) % m;
+    if (r < 0) r += m;
+    return r;
+}
+
+/* ------------------------------------------------------------------ */
+/* memory channels + hybrid DRAM/HBM                                    */
+/* ------------------------------------------------------------------ */
+typedef struct {
+    double busy, spec_busy;
+    int64_t bytes, accesses, row_hits;
+    int64_t open_row[8];
+    int64_t bl, rhl, rbb;
+    double bw, gap;
+} Chan;
+
+static void chan_init(Chan *c, int64_t bl, int64_t rhl, double bw,
+                      double gap, int64_t rbb) {
+    memset(c, 0, sizeof(*c));
+    c->bl = bl; c->rhl = rhl; c->bw = bw; c->gap = gap; c->rbb = rbb;
+    for (int i = 0; i < 8; i++) c->open_row[i] = -1;
+}
+
+static double chan_access(Chan *c, double now, int64_t addr, int64_t nbytes,
+                          int spec, double *svc) {
+    c->accesses++;
+    c->bytes += nbytes;
+    int64_t bank = (addr / c->rbb) % 8;
+    int64_t row = addr / (c->rbb * 8);
+    double lat, gap;
+    if (c->open_row[bank] == row) {
+        lat = (double)c->rhl; gap = 0.0; c->row_hits++;
+    } else {
+        lat = (double)c->bl; gap = c->gap; c->open_row[bank] = row;
+    }
+    double xfer = (double)nbytes / c->bw + gap;
+    double start;
+    if (spec) {
+        start = now > c->busy ? now : c->busy;
+        if (c->spec_busy > start) start = c->spec_busy;
+        c->spec_busy = start + xfer;
+    } else {
+        start = now > c->busy ? now : c->busy;
+        c->busy = start + xfer;
+        if (c->spec_busy < c->busy) c->spec_busy = c->busy;
+    }
+    double done = start + lat + xfer;
+    *svc = done - now;
+    return done;
+}
+
+typedef struct {
+    Chan dram, hbm;
+    int has_hbm;
+    Map heat, persist, loc;                 /* page -> count / count / 0|1 */
+    int64_t *loc_order;                     /* first-promotion page order  */
+    int64_t loc_n, loc_cap;
+    int64_t hbm_pages, hbm_pages_max, migrations, migration_bytes;
+    int64_t since_decay, hot, window;
+    double mig_cost, mig_stall;
+} Mem;
+
+static void mem_set_loc(Mem *m, int64_t page, int64_t v) {
+    int64_t *lv = map_get(&m->loc, page);
+    if (!lv) {
+        lv = map_put(&m->loc, page);
+        if (m->loc_n == m->loc_cap) {
+            m->loc_cap *= 2;
+            m->loc_order = realloc(m->loc_order,
+                                   m->loc_cap * sizeof(int64_t));
+        }
+        m->loc_order[m->loc_n++] = page;
+    }
+    *lv = v;
+}
+
+static void mem_decay(Mem *m) {
+    int64_t half = m->hot / 2;
+    int64_t n = m->heat.count, idx = 0;
+    int64_t *ks = malloc((n ? n : 1) * sizeof(int64_t));
+    int64_t *hs = malloc((n ? n : 1) * sizeof(int64_t));
+    for (int64_t i = 0; i < m->heat.cap; i++)
+        if (m->heat.used[i]) {
+            ks[idx] = m->heat.keys[i];
+            hs[idx] = m->heat.vals[i];
+            idx++;
+        }
+    for (int64_t i = 0; i < n; i++) {
+        int64_t p = ks[i], h = hs[i];
+        if (h >= half) (*map_put(&m->persist, p))++;
+        int64_t nh = h >> 1;
+        if (nh) {
+            *map_get(&m->heat, p) = nh;
+        } else {
+            map_del(&m->heat, p);
+            map_del(&m->persist, p);
+        }
+    }
+    free(ks); free(hs);
+}
+
+static void mem_promote(Mem *m, int64_t page, double now) {
+    if (m->hbm_pages >= m->hbm_pages_max) {
+        int64_t coldest = 0, ch = 0;
+        int found = 0;
+        for (int64_t i = 0; i < m->loc_n; i++) {
+            int64_t p = m->loc_order[i];
+            int64_t *lv = map_get(&m->loc, p);
+            if (!lv || *lv != 1) continue;
+            int64_t *hv = map_get(&m->heat, p);
+            int64_t h = hv ? *hv : 0;
+            if (!found || h < ch) { found = 1; coldest = p; ch = h; }
+        }
+        if (!found) return;
+        mem_set_loc(m, coldest, 0);
+        m->hbm_pages--;
+    }
+    mem_set_loc(m, page, 1);
+    m->hbm_pages++;
+    m->migrations++;
+    m->mig_stall += m->mig_cost;
+    m->migration_bytes += 4096;
+    double b = m->dram.busy;
+    m->dram.busy = (b > now ? b : now) + 4096.0 / m->dram.bw;
+    b = m->hbm.busy;
+    m->hbm.busy = (b > now ? b : now) + 4096.0 / m->hbm.bw;
+}
+
+static double mem_access(Mem *m, double now, int64_t addr, int64_t nbytes,
+                         int spec, double *svc) {
+    Chan *ch = &m->dram;
+    if (m->has_hbm) {
+        int64_t page = addr / 4096;
+        int64_t *hv = map_put(&m->heat, page);
+        int64_t heat = *hv + 1;
+        *hv = heat;
+        m->since_decay++;
+        if (m->since_decay >= m->window) {
+            m->since_decay = 0;
+            mem_decay(m);
+        }
+        int64_t *pv = map_get(&m->persist, page);
+        int64_t *lv = map_get(&m->loc, page);
+        if (heat >= m->hot && pv && *pv >= 2 && (!lv || *lv == 0))
+            mem_promote(m, page, now);
+        lv = map_get(&m->loc, page);
+        if (lv && *lv == 1) ch = &m->hbm;
+    }
+    return chan_access(ch, now, addr, nbytes, spec, svc);
+}
+
+/* ------------------------------------------------------------------ */
+/* cache level (SoA columns; ways scanned directly)                     */
+/* ------------------------------------------------------------------ */
+typedef struct {
+    int64_t S, A, inst, sbits;
+    int64_t *tag, *seq, seq_ctr;
+    uint8_t *vld, *dirty, *pref, *reu;
+    int32_t *ten;
+    double *last, *ready;
+    int64_t evict, dirty_ev, pfill;
+    int ta_on;
+    int64_t nten;
+    /* tensor-aware state, one block per instance */
+    double **bucket;
+    int64_t **fills, **hits, **refills, *since;
+    Fifo *shadow;
+} Cache;
+
+static void cache_init(Cache *c, int64_t S, int64_t A, int64_t inst,
+                       int ta_on, int64_t nten) {
+    memset(c, 0, sizeof(*c));
+    c->S = S; c->A = A; c->inst = inst; c->ta_on = ta_on; c->nten = nten;
+    int64_t sb = 0;
+    while ((1LL << sb) < S) sb++;
+    c->sbits = sb;
+    int64_t nslot = inst * S * A;
+    c->tag = malloc(nslot * sizeof(int64_t));
+    c->seq = calloc(nslot, sizeof(int64_t));
+    c->vld = calloc(nslot, 1);
+    c->dirty = calloc(nslot, 1);
+    c->pref = calloc(nslot, 1);
+    c->reu = calloc(nslot, 1);
+    c->ten = calloc(nslot, sizeof(int32_t));
+    c->last = calloc(nslot, sizeof(double));
+    c->ready = calloc(nslot, sizeof(double));
+    if (ta_on) {
+        c->bucket = malloc(inst * sizeof(double *));
+        c->fills = malloc(inst * sizeof(int64_t *));
+        c->hits = malloc(inst * sizeof(int64_t *));
+        c->refills = malloc(inst * sizeof(int64_t *));
+        c->since = calloc(inst, sizeof(int64_t));
+        c->shadow = malloc(inst * sizeof(Fifo));
+        for (int64_t i = 0; i < inst; i++) {
+            c->bucket[i] = malloc(nten * sizeof(double));
+            for (int64_t t = 0; t < nten; t++) c->bucket[i][t] = 3.0;
+            c->fills[i] = calloc(nten, sizeof(int64_t));
+            c->hits[i] = calloc(nten, sizeof(int64_t));
+            c->refills[i] = calloc(nten, sizeof(int64_t));
+            fifo_init(&c->shadow[i], 16384, 0);
+        }
+    }
+}
+
+static void cache_free(Cache *c) {
+    free(c->tag); free(c->seq); free(c->vld); free(c->dirty);
+    free(c->pref); free(c->reu); free(c->ten); free(c->last); free(c->ready);
+    if (c->ta_on) {
+        for (int64_t i = 0; i < c->inst; i++) {
+            free(c->bucket[i]); free(c->fills[i]); free(c->hits[i]);
+            free(c->refills[i]); fifo_free(&c->shadow[i]);
+        }
+        free(c->bucket); free(c->fills); free(c->hits); free(c->refills);
+        free(c->since); free(c->shadow);
+    }
+}
+
+static void ta_bucket(Cache *c, int64_t inst, int32_t t) {
+    int64_t f = c->fills[inst][t];
+    double u;
+    if (f == 0) {
+        u = 1.0;
+    } else {
+        u = (double)(c->hits[inst][t] + 16 * c->refills[inst][t]) / (double)f;
+        if (u > 4.0) u = 4.0;
+    }
+    c->bucket[inst][t] = u < 0.05 ? 1.0 : (u < 0.5 ? 2.0 : 3.0);
+}
+
+static void ta_hit(Cache *c, int64_t inst, int32_t t) {
+    c->hits[inst][t]++;
+    ta_bucket(c, inst, t);
+}
+
+static void ta_fill(Cache *c, int64_t inst, int32_t t, int64_t blk) {
+    c->fills[inst][t]++;
+    if (blk >= 0 && pmod_hash(blk, 16) == 0) {
+        Fifo *sh = &c->shadow[inst];
+        if (fifo_get(sh, blk)) {
+            c->refills[inst][t]++;
+        } else {
+            if (fifo_len(sh) >= 16384) fifo_evict_oldest(sh, 0, 0, 0);
+            fifo_put(sh, blk);
+        }
+    }
+    c->since[inst]++;
+    if (c->since[inst] >= 16384) {
+        c->since[inst] = 0;
+        for (int64_t k = 0; k < c->nten; k++) {
+            c->fills[inst][k] >>= 1;
+            c->hits[inst][k] >>= 1;
+            c->refills[inst][k] >>= 1;
+        }
+        for (int64_t k = 0; k < c->nten; k++) ta_bucket(c, inst, (int32_t)k);
+    } else {
+        ta_bucket(c, inst, t);
+    }
+}
+
+static inline int64_t c_find(const Cache *c, int64_t base, int64_t tag) {
+    for (int64_t w = 0; w < c->A; w++)
+        if (c->vld[base + w] && c->tag[base + w] == tag) return w;
+    return -1;
+}
+
+/* fill; returns 1 + (*vaddr, *vdirty) if a line was evicted */
+static int c_insert(Cache *c, int64_t si, int64_t s, int64_t tag,
+                    int64_t blk, int32_t ten, int reu, double now,
+                    int is_write, int prefetched, double ready,
+                    int64_t *vaddr, int *vdirty) {
+    int64_t base = si * c->A;
+    int64_t way = c_find(c, base, tag);
+    int victim = 0;
+    if (way < 0) {
+        int64_t freew = -1, occ = 0;
+        for (int64_t w = 0; w < c->A; w++) {
+            if (c->vld[base + w]) occ++;
+            else if (freew < 0) freew = w;
+        }
+        if (occ < c->A) {
+            way = freew;
+        } else {
+            /* victim: lexicographic min reproducing the reference's
+             * (rank, last_touch) ordering with dict-insertion tie-break */
+            double vb = 0.0, vlast = 0.0;
+            int64_t vseq = 0;
+            int first = 1;
+            if (!c->ta_on) {
+                for (int64_t w = 0; w < c->A; w++) {
+                    int64_t sl = base + w;
+                    double lt = c->last[sl];
+                    if (first || lt < vlast
+                            || (lt == vlast && c->seq[sl] < vseq)) {
+                        first = 0; way = w; vlast = lt; vseq = c->seq[sl];
+                    }
+                }
+            } else {
+                double *bucket = c->bucket[si / c->S];
+                for (int64_t w = 0; w < c->A; w++) {
+                    int64_t sl = base + w;
+                    double b;
+                    if (c->pref[sl]) b = 2.5;
+                    else if (c->reu[sl] == 0) b = 0.0;
+                    else b = bucket[c->ten[sl]];
+                    double lt = c->last[sl];
+                    if (first || b < vb
+                            || (b == vb && (lt < vlast
+                                || (lt == vlast && c->seq[sl] < vseq)))) {
+                        first = 0; way = w; vb = b; vlast = lt;
+                        vseq = c->seq[sl];
+                    }
+                }
+            }
+            victim = 1;
+            c->evict++;
+            int64_t sl = base + way;
+            *vdirty = c->dirty[sl];
+            if (*vdirty) c->dirty_ev++;
+            *vaddr = ((c->tag[sl] << c->sbits) | s) << 6;
+        }
+    }
+    int64_t sl = base + way;
+    c->vld[sl] = 1;
+    c->tag[sl] = tag;
+    c->dirty[sl] = (uint8_t)is_write;
+    c->ten[sl] = ten;
+    c->reu[sl] = (uint8_t)reu;
+    c->last[sl] = now;
+    c->pref[sl] = (uint8_t)prefetched;
+    c->ready[sl] = ready;
+    c->seq[sl] = c->seq_ctr++;
+    if (prefetched) c->pfill++;
+    if (c->ta_on) ta_fill(c, si / c->S, ten, blk);
+    return victim;
+}
+
+static int c_invalidate(Cache *c, int64_t si, int64_t tag) {
+    int64_t base = si * c->A;
+    int64_t w = c_find(c, base, tag);
+    if (w < 0) return 0;
+    c->vld[base + w] = 0;
+    return 1;
+}
+
+/* ------------------------------------------------------------------ */
+/* prefetchers                                                          */
+/* ------------------------------------------------------------------ */
+typedef struct {
+    Fifo table;      /* pc -> [last_addr, stride, conf] */
+    Map acc;         /* pc -> [issued, used] */
+    Fifo pending;    /* block -> [pc] */
+    int64_t issued;
+} Stride;
+
+static int stride_observe(Stride *s, int64_t tsize, int64_t conf,
+                          int64_t deg, int64_t pc, int64_t addr,
+                          int64_t *out) {
+    int64_t src;
+    if (fifo_pop_key(&s->pending, fdiv(addr, 64), &src, 1)) {
+        int64_t *a = map_get(&s->acc, src);
+        if (a) a[1] += 1;
+    }
+    int64_t *e = fifo_get(&s->table, pc);
+    if (!e) {
+        if (fifo_len(&s->table) >= tsize)
+            fifo_evict_oldest(&s->table, 0, 0, 0);
+        e = fifo_put(&s->table, pc);
+        e[0] = addr; e[1] = 0; e[2] = 0;
+        return 0;
+    }
+    int64_t stride = addr - e[0];
+    if (stride != 0 && stride == e[1]) {
+        if (e[2] < 7) e[2] += 1;
+    } else {
+        e[1] = stride;
+        e[2] = 0;
+    }
+    e[0] = addr;
+    int n = 0;
+    if (e[2] >= conf && e[1] != 0) {
+        int64_t *a = map_get(&s->acc, pc);
+        if (!a) a = map_put(&s->acc, pc);
+        if (a[0] >= 32 && (double)a[1] / (double)a[0] < 0.4)
+            return 0;                       /* throttled: inaccurate PC */
+        int64_t st = e[1];
+        for (int64_t k = 1; k <= deg; k++) {
+            int64_t target = addr + st * k;
+            out[n++] = target;
+            a[0] += 1;
+            if (fifo_len(&s->pending) > 4096)
+                fifo_evict_oldest(&s->pending, 0, 0, 0);
+            int64_t *pv = fifo_put(&s->pending, fdiv(target, 64));
+            pv[0] = pc;
+        }
+        s->issued += n;
+    }
+    return n;
+}
+
+typedef struct {
+    Fifo hist;       /* pc -> [len, b0..b8] */
+    MkMap markov;
+    Fifo pending;    /* block -> [f1, f2, f3] */
+    double *w_pc, *w_d1, *w_d2;
+    double bias;
+    int64_t issued, trained;
+} ML;
+
+static void ml_train(ML *m, int64_t f1, int64_t f2, int64_t f3, int useful) {
+    double lr = useful ? 0.5 : -0.5;
+    double x;
+    x = m->w_pc[f1] + lr;
+    if (x > 8.0) x = 8.0;
+    if (x < -8.0) x = -8.0;
+    m->w_pc[f1] = x;
+    x = m->w_d1[f2] + lr;
+    if (x > 8.0) x = 8.0;
+    if (x < -8.0) x = -8.0;
+    m->w_d1[f2] = x;
+    x = m->w_d2[f3] + lr;
+    if (x > 8.0) x = 8.0;
+    if (x < -8.0) x = -8.0;
+    m->w_d2[f3] = x;
+    x = m->bias + lr * 0.25;
+    if (x > 8.0) x = 8.0;
+    if (x < -8.0) x = -8.0;
+    m->bias = x;
+    m->trained++;
+}
+
+static int ml_observe(ML *m, int64_t ts, double thresh, int64_t hlen,
+                      int64_t pc, int64_t addr, int64_t *out) {
+    int64_t block = fdiv(addr, 64);
+    int n = 0;
+    int64_t fv[3];
+    if (fifo_pop_key(&m->pending, block, fv, 3))
+        ml_train(m, fv[0], fv[1], fv[2], 1);
+    int64_t *h = fifo_get(&m->hist, pc);
+    if (!h) {
+        h = fifo_put(&m->hist, pc);
+        h[0] = 0;
+    }
+    int64_t hl = h[0];
+    if (hl >= 2) {
+        int64_t d_new = block - h[hl];
+        int64_t key2 = (hl >= 3) ? h[hl - 1] - h[hl - 2] : 0;
+        int64_t key3 = h[hl] - h[hl - 1];
+        MkEntry *me = mk_find(&m->markov, pc, key2, key3, 1);
+        int fi = -1;
+        for (int i = 0; i < me->cnt; i++)
+            if (me->deltas[i] == d_new) { fi = i; break; }
+        if (fi >= 0) {
+            me->counts[fi]++;
+        } else {
+            me->deltas[me->cnt] = d_new;
+            me->counts[me->cnt] = 1;
+            me->cnt++;
+        }
+        if (me->cnt > 8) {                  /* bound entry: pop min count */
+            int mi = 0;
+            for (int i = 1; i < me->cnt; i++)
+                if (me->counts[i] < me->counts[mi]) mi = i;
+            for (int i = mi; i < me->cnt - 1; i++) {
+                me->deltas[i] = me->deltas[i + 1];
+                me->counts[i] = me->counts[i + 1];
+            }
+            me->cnt--;
+        }
+        MkEntry *cand = mk_find(&m->markov, pc, key3, d_new, 0);
+        if (cand && cand->cnt > 0) {
+            int bi = 0;
+            for (int i = 1; i < cand->cnt; i++)
+                if (cand->counts[i] > cand->counts[bi]) bi = i;
+            int64_t best = cand->deltas[bi];
+            if (best != 0) {
+                int64_t f1 = pmod_hash(pc, ts);
+                int64_t f2 = pmod_hash(key3, ts);
+                int64_t f3 = pmod_hash(d_new, ts);
+                if (m->w_pc[f1] + m->w_d1[f2] + m->w_d2[f3] + m->bias
+                        >= thresh) {
+                    out[n++] = (block + best) * 64;
+                    m->issued++;
+                }
+                if (fifo_len(&m->pending) > 2048) {
+                    int64_t sk, sv[3];
+                    if (fifo_evict_oldest(&m->pending, &sk, sv, 3))
+                        ml_train(m, sv[0], sv[1], sv[2], 0);
+                }
+                int64_t *pv = fifo_put(&m->pending, block + best);
+                pv[0] = f1; pv[1] = f2; pv[2] = f3;
+            }
+        }
+    }
+    h[1 + hl] = block;
+    hl++;
+    if (hl > hlen) {
+        for (int64_t i = 1; i < hl; i++) h[i] = h[i + 1];
+        hl--;
+    }
+    h[0] = hl;
+    if (fifo_len(&m->hist) > 512) fifo_evict_oldest(&m->hist, 0, 0, 0);
+    return n;
+}
+
+/* ------------------------------------------------------------------ */
+/* the simulator                                                        */
+/* ------------------------------------------------------------------ */
+typedef struct {
+    Cache l1, l2, l3;
+    int has_l3, mesi, pf_on, ml_on;
+    Mem mem;
+    Map dir;
+    Stride *stride;
+    ML *ml;
+    int64_t n_req, n_cores;
+    int64_t S1m, S2m, S3m, s1b, s2b, s3b;
+    int64_t hl1, hl2, hl3;
+    int64_t st_tsize, st_conf, st_deg, ml_tsize, ml_hist;
+    double ml_thresh, core_mlp, accel_mlp, c2c_lat, inv_lat, pf_throttle;
+    double time[8], lat_sum;
+    int64_t n_acc, wb_lines, pf_dropped;
+    int64_t dir_inv, dir_c2c, dir_upg;
+    int64_t l1h[8], l1mi[8], l1pu[8], l2h[8], l2mi[8], l2pu[8];
+    int64_t l3h, l3mi, l3pu;
+} Sim;
+
+static void wb(Sim *S, double now, int64_t vaddr) {
+    S->wb_lines++;
+    double svc;
+    mem_access(&S->mem, now, vaddr, 64, 1, &svc);
+}
+
+static double promote_wait(Sim *S, Cache *c, int64_t sl, int64_t addr,
+                           double now) {
+    double remaining = c->ready[sl] - now;
+    Chan *ch = &S->mem.dram;
+    if (S->mem.has_hbm) {
+        int64_t *lv = map_get(&S->mem.loc, fdiv(addr, 4096));
+        if (lv && *lv == 1) ch = &S->mem.hbm;
+    }
+    double promoted = (double)ch->rhl + 64.0 / ch->bw;
+    c->ready[sl] = 0.0;
+    double rem = remaining > 0.0 ? remaining : 0.0;
+    return rem < promoted ? rem : promoted;
+}
+
+static void fill_shared(Sim *S, int64_t addr, int64_t blk, int32_t ten,
+                        int reu, double now, int prefetched, int is_write) {
+    if (!S->has_l3) return;
+    if (S->l3.ta_on && reu == 0 && !prefetched && !is_write
+            && S->l3.bucket[0][ten] == 1.0)
+        return;                 /* bucket 1.0 <=> measured utility < 0.05 */
+    int64_t s3 = blk & S->S3m;
+    int64_t vaddr;
+    int vd;
+    if (c_insert(&S->l3, s3, s3, blk >> S->s3b, blk, ten, reu, now, 0,
+                 prefetched, 0.0, &vaddr, &vd))
+        if (vd) wb(S, now, vaddr);
+}
+
+static void dir_evict(Sim *S, int64_t blk, int64_t r) {
+    int64_t *e = map_get(&S->dir, blk);
+    if (!e) return;
+    e[0] &= ~(1LL << r);
+    if (e[1] == r) e[1] = -1;
+    if (e[0] == 0) map_del(&S->dir, blk);
+}
+
+static void fill_private(Sim *S, int64_t r, int64_t addr, int64_t blk,
+                         int32_t ten, int reu, double now, int is_write) {
+    int64_t s2 = blk & S->S2m;
+    int64_t vaddr;
+    int vd;
+    if (c_insert(&S->l2, r * S->l2.S + s2, s2, blk >> S->s2b, blk, ten, reu,
+                 now, is_write, 0, 0.0, &vaddr, &vd)) {
+        int64_t vblk = vaddr >> 6;
+        if (S->mesi) {
+            int64_t s1v = vblk & S->S1m;
+            if (c_find(&S->l1, (r * S->l1.S + s1v) * S->l1.A,
+                       vblk >> S->s1b) < 0)
+                dir_evict(S, vblk, r);
+        }
+        if (vd) wb(S, now, vaddr);
+    }
+    int64_t s1 = blk & S->S1m;
+    if (c_insert(&S->l1, r * S->l1.S + s1, s1, blk >> S->s1b, blk, ten, reu,
+                 now, is_write, 0, 0.0, &vaddr, &vd)) {
+        if (vd) {
+            int64_t vblk = vaddr >> 6;
+            int64_t s2v = vblk & S->S2m;
+            int64_t w2 = c_find(&S->l2, (r * S->l2.S + s2v) * S->l2.A,
+                                vblk >> S->s2b);
+            if (w2 >= 0)
+                S->l2.dirty[(r * S->l2.S + s2v) * S->l2.A + w2] = 1;
+            else
+                wb(S, now, vaddr);
+        }
+    }
+}
+
+static void invalidate_others(Sim *S, int64_t blk, int64_t req) {
+    int64_t t1 = blk >> S->s1b, si1 = blk & S->S1m;
+    int64_t t2 = blk >> S->s2b, si2 = blk & S->S2m;
+    for (int64_t r2 = 0; r2 < S->n_req; r2++) {
+        if (r2 == req) continue;
+        c_invalidate(&S->l1, r2 * S->l1.S + si1, t1);
+        c_invalidate(&S->l2, r2 * S->l2.S + si2, t2);
+        if (S->mesi) dir_evict(S, blk, r2);
+    }
+}
+
+static void do_prefetch(Sim *S, int64_t r, int64_t addr, int32_t ten,
+                        int reu, double now, int is_stride) {
+    int64_t blk = addr >> 6;
+    int64_t s2 = blk & S->S2m, t2 = blk >> S->s2b;
+    if (c_find(&S->l2, (r * S->l2.S + s2) * S->l2.A, t2) >= 0) return;
+    if (S->has_l3) {
+        int64_t s3 = blk & S->S3m;
+        if (c_find(&S->l3, s3 * S->l3.A, blk >> S->s3b) >= 0) {
+            if (is_stride) {    /* shared-level hit: cheap promote to L2 */
+                int64_t vaddr;
+                int vd;
+                if (c_insert(&S->l2, r * S->l2.S + s2, s2, t2, blk, ten,
+                             reu, now, 0, 1, now + (double)S->hl3,
+                             &vaddr, &vd))
+                    if (vd) wb(S, now, vaddr);
+            }
+            return;
+        }
+    }
+    Chan *ch = &S->mem.dram;
+    if (S->mem.has_hbm) {
+        int64_t *lv = map_get(&S->mem.loc, fdiv(addr, 4096));
+        if (lv && *lv == 1) ch = &S->mem.hbm;
+    }
+    if (ch->spec_busy - ch->busy > S->pf_throttle) {
+        S->pf_dropped++;
+        return;
+    }
+    double svc;
+    double done = mem_access(&S->mem, now, addr, 64, 1, &svc);
+    int64_t vaddr;
+    int vd, v;
+    if (!is_stride && S->has_l3) {
+        int64_t s3 = blk & S->S3m;
+        v = c_insert(&S->l3, s3, s3, blk >> S->s3b, blk, ten, reu, now, 0,
+                     1, done, &vaddr, &vd);
+    } else {
+        v = c_insert(&S->l2, r * S->l2.S + s2, s2, t2, blk, ten, reu, now,
+                     0, 1, done, &vaddr, &vd);
+    }
+    if (v && vd) wb(S, now, vaddr);
+}
+
+/* int-config indices (mirror core/native.py) */
+enum { CI_NREQ, CI_NCORES, CI_S1, CI_A1, CI_S2, CI_A2, CI_S3, CI_A3,
+       CI_HASL3, CI_MESI, CI_PFON, CI_MLON, CI_TA1, CI_TA2, CI_TA3,
+       CI_HYBRID, CI_NTEN, CI_ST_TSIZE, CI_ST_CONF, CI_ST_DEG,
+       CI_ML_TSIZE, CI_ML_HIST, CI_HP_HOT, CI_HP_WINDOW, CI_HL1, CI_HL2,
+       CI_HL3, CI_HBM_PAGES_MAX, CI_COUNT };
+
+/* double-config indices */
+enum { CD_ML_THRESH, CD_HP_MIGCOST, CD_D_BL, CD_D_RHL, CD_D_BW, CD_D_GAP,
+       CD_D_RBB, CD_H_BL, CD_H_RHL, CD_H_BW, CD_H_GAP, CD_H_RBB,
+       CD_CORE_MLP, CD_ACCEL_MLP, CD_C2C, CD_INV, CD_PF_THROTTLE,
+       CD_COUNT };
+
+void run_trace(const int64_t *ci, const double *cd,
+               const int32_t *core, const int64_t *pcv, const int64_t *addr,
+               const uint8_t *write, const int32_t *tensor,
+               const uint8_t *reuse, int64_t n,
+               int64_t *oi, double *od) {
+    Sim SS;
+    Sim *S = &SS;
+    memset(S, 0, sizeof(Sim));
+    S->n_req = ci[CI_NREQ];
+    S->n_cores = ci[CI_NCORES];
+    int64_t nten = ci[CI_NTEN];
+    cache_init(&S->l1, ci[CI_S1], ci[CI_A1], S->n_req, ci[CI_TA1], nten);
+    cache_init(&S->l2, ci[CI_S2], ci[CI_A2], S->n_req, ci[CI_TA2], nten);
+    S->has_l3 = ci[CI_HASL3];
+    if (S->has_l3)
+        cache_init(&S->l3, ci[CI_S3], ci[CI_A3], 1, ci[CI_TA3], nten);
+    S->mesi = ci[CI_MESI];
+    S->pf_on = ci[CI_PFON];
+    S->ml_on = ci[CI_MLON];
+    S->S1m = S->l1.S - 1; S->s1b = S->l1.sbits;
+    S->S2m = S->l2.S - 1; S->s2b = S->l2.sbits;
+    if (S->has_l3) { S->S3m = S->l3.S - 1; S->s3b = S->l3.sbits; }
+    S->hl1 = ci[CI_HL1]; S->hl2 = ci[CI_HL2]; S->hl3 = ci[CI_HL3];
+    S->st_tsize = ci[CI_ST_TSIZE];
+    S->st_conf = ci[CI_ST_CONF];
+    S->st_deg = ci[CI_ST_DEG];
+    S->ml_tsize = ci[CI_ML_TSIZE];
+    S->ml_hist = ci[CI_ML_HIST];
+    S->ml_thresh = cd[CD_ML_THRESH];
+    S->core_mlp = cd[CD_CORE_MLP];
+    S->accel_mlp = cd[CD_ACCEL_MLP];
+    S->c2c_lat = cd[CD_C2C];
+    S->inv_lat = cd[CD_INV];
+    S->pf_throttle = cd[CD_PF_THROTTLE];
+
+    chan_init(&S->mem.dram, (int64_t)cd[CD_D_BL], (int64_t)cd[CD_D_RHL],
+              cd[CD_D_BW], cd[CD_D_GAP], (int64_t)cd[CD_D_RBB]);
+    S->mem.has_hbm = ci[CI_HYBRID];
+    if (S->mem.has_hbm)
+        chan_init(&S->mem.hbm, (int64_t)cd[CD_H_BL], (int64_t)cd[CD_H_RHL],
+                  cd[CD_H_BW], cd[CD_H_GAP], (int64_t)cd[CD_H_RBB]);
+    map_init(&S->mem.heat, 4096, 1);
+    map_init(&S->mem.persist, 1024, 1);
+    map_init(&S->mem.loc, 1024, 1);
+    S->mem.loc_cap = 1024;
+    S->mem.loc_order = malloc(S->mem.loc_cap * sizeof(int64_t));
+    S->mem.hot = ci[CI_HP_HOT];
+    S->mem.window = ci[CI_HP_WINDOW];
+    S->mem.mig_cost = cd[CD_HP_MIGCOST];
+    S->mem.hbm_pages_max = ci[CI_HBM_PAGES_MAX];
+    map_init(&S->dir, 8192, 2);
+
+    S->stride = malloc(S->n_req * sizeof(Stride));
+    S->ml = malloc(S->n_req * sizeof(ML));
+    for (int64_t r = 0; r < S->n_req; r++) {
+        if (S->pf_on) {
+            fifo_init(&S->stride[r].table, S->st_tsize, 3);
+            map_init(&S->stride[r].acc, 1024, 2);
+            fifo_init(&S->stride[r].pending, 4097, 1);
+            S->stride[r].issued = 0;
+        }
+        if (S->pf_on && S->ml_on) {
+            fifo_init(&S->ml[r].hist, 512, 10);
+            mk_init(&S->ml[r].markov, 4096);
+            fifo_init(&S->ml[r].pending, 2049, 3);
+            S->ml[r].w_pc = calloc(S->ml_tsize, sizeof(double));
+            S->ml[r].w_d1 = calloc(S->ml_tsize, sizeof(double));
+            S->ml[r].w_d2 = calloc(S->ml_tsize, sizeof(double));
+            S->ml[r].bias = 0.0;
+            S->ml[r].issued = 0;
+            S->ml[r].trained = 0;
+        }
+    }
+
+    Cache *l1 = &S->l1, *l2 = &S->l2, *l3 = &S->l3;
+    int64_t A1 = l1->A, A2 = l2->A, A3 = S->has_l3 ? l3->A : 0;
+    double fast_max = (double)(S->hl1 + 12);
+    int64_t cands[16], mlc[4];
+
+    for (int64_t i = 0; i < n; i++) {
+        int64_t r = core[i];
+        double now = S->time[r];
+        int w = write[i];
+        int64_t a = addr[i];
+        int64_t blk = a >> 6;
+        int64_t t1 = blk >> S->s1b, s1 = blk & S->S1m;
+        int64_t base1 = (r * l1->S + s1) * A1;
+        double lat = (double)S->hl1;
+        int32_t ten = tensor[i];
+        int reu = reuse[i];
+
+        /* ---- L1 ---- */
+        int64_t way = c_find(l1, base1, t1);
+        if (way >= 0) {
+            int64_t sl = base1 + way;
+            S->l1h[r]++;
+            if (l1->ta_on) ta_hit(l1, r, l1->ten[sl]);
+            if (l1->pref[sl]) {
+                S->l1pu[r]++;
+                l1->pref[sl] = 0;
+            }
+            l1->last[sl] = now;
+            if (w) l1->dirty[sl] = 1;
+            /* (reference sharer-upgrade branch is unreachable: lookup
+             * already marked the line MODIFIED) */
+            if (l1->ready[sl] > now)
+                lat += promote_wait(S, l1, sl, a, now);
+            goto finish_hit;
+        }
+        S->l1mi[r]++;
+
+        int nc = 0, nm = 0;
+        if (S->pf_on) {
+            nc = stride_observe(&S->stride[r], S->st_tsize, S->st_conf,
+                                S->st_deg, pcv[i], a, cands);
+            if (S->ml_on)
+                nm = ml_observe(&S->ml[r], S->ml_tsize, S->ml_thresh,
+                                S->ml_hist, pcv[i], a, mlc);
+        }
+        lat += (double)S->hl2;
+
+        /* ---- L2 ---- */
+        {
+            int64_t s2 = blk & S->S2m, t2 = blk >> S->s2b;
+            int64_t base2 = (r * l2->S + s2) * A2;
+            way = c_find(l2, base2, t2);
+            if (way >= 0) {
+                int64_t sl = base2 + way;
+                S->l2h[r]++;
+                if (l2->ta_on) ta_hit(l2, r, l2->ten[sl]);
+                if (l2->pref[sl]) {
+                    S->l2pu[r]++;
+                    l2->pref[sl] = 0;
+                }
+                l2->last[sl] = now;
+                if (w) l2->dirty[sl] = 1;
+                if (l2->ready[sl] > now)
+                    lat += promote_wait(S, l2, sl, a, now);
+                int64_t vaddr;
+                int vd;
+                c_insert(l1, r * l1->S + s1, s1, t1, blk, ten, reu, now,
+                         w, 0, 0.0, &vaddr, &vd);  /* victim dropped */
+                goto finish_hit;
+            }
+            S->l2mi[r]++;
+        }
+
+        if (S->pf_on) {
+            for (int k = 0; k < nc; k++)
+                do_prefetch(S, r, cands[k], ten, reu, now, 1);
+            for (int k = 0; k < nm; k++)
+                do_prefetch(S, r, mlc[k], ten, reu, now, 0);
+        }
+
+        /* ---- coherence (leaving the private domain) ---- */
+        if (S->mesi) {
+            int64_t bit = 1LL << r;
+            if (w) {
+                int64_t *e = map_get(&S->dir, blk);
+                if (!e) {
+                    e = map_put(&S->dir, blk);
+                    e[0] = 0; e[1] = -1;
+                }
+                int64_t others = e[0] & ~bit;
+                int n_inv = __builtin_popcountll((uint64_t)others);
+                if (n_inv) S->dir_inv += n_inv;
+                if ((e[0] & bit) && e[1] != r) S->dir_upg++;
+                e[0] = bit;
+                e[1] = r;
+                if (n_inv) {
+                    invalidate_others(S, blk, r);
+                    lat += S->inv_lat;
+                }
+            } else {
+                int64_t *e = map_get(&S->dir, blk);
+                if (!e) {
+                    e = map_put(&S->dir, blk);
+                    e[0] = 0; e[1] = -1;
+                }
+                int64_t mask = e[0], owner = e[1];
+                int64_t provider = -1;
+                if (owner >= 0 && owner != r) {
+                    provider = owner;
+                    S->dir_c2c++;
+                    e[1] = -1;
+                }
+                e[0] = mask | bit;
+                if (e[0] == bit && provider < 0) e[1] = r;
+                if (provider >= 0) {
+                    if (S->has_l3) {
+                        lat += S->c2c_lat;
+                        fill_shared(S, a, blk, ten, reu, now, 0, 0);
+                    } else {
+                        double svc;
+                        mem_access(&S->mem, now + lat, a, 64, 0, &svc);
+                        lat += svc;
+                    }
+                    fill_private(S, r, a, blk, ten, reu, now, w);
+                    goto finish_hit;
+                }
+            }
+        }
+
+        /* ---- shared L3 ---- */
+        if (S->has_l3) {
+            lat += (double)S->hl3;
+            int64_t s3 = blk & S->S3m;
+            int64_t base3 = s3 * A3;
+            way = c_find(l3, base3, blk >> S->s3b);
+            if (way >= 0) {
+                int64_t sl = base3 + way;
+                S->l3h++;
+                if (l3->ta_on) ta_hit(l3, 0, l3->ten[sl]);
+                if (l3->pref[sl]) {
+                    S->l3pu++;
+                    l3->pref[sl] = 0;
+                }
+                l3->last[sl] = now;
+                if (w) l3->dirty[sl] = 1;
+                fill_private(S, r, a, blk, ten, reu, now, w);
+                goto finish_hit;
+            }
+            S->l3mi++;
+        }
+
+        /* ---- main memory ---- */
+        {
+            double svc;
+            mem_access(&S->mem, now + lat, a, 64, 0, &svc);
+            lat += svc;
+            fill_shared(S, a, blk, ten, reu, now, 0, w);
+            fill_private(S, r, a, blk, ten, reu, now, w);
+            S->lat_sum += lat;
+            S->n_acc++;
+            double d = lat / (r >= S->n_cores ? S->accel_mlp : S->core_mlp);
+            S->time[r] = now + (d > 2.0 ? d : 2.0);
+            continue;
+        }
+
+    finish_hit:
+        S->lat_sum += lat;
+        S->n_acc++;
+        if (lat <= fast_max) {
+            S->time[r] = now + 1.0;
+        } else {
+            double d = lat / (r >= S->n_cores ? S->accel_mlp : S->core_mlp);
+            S->time[r] = now + (d > 2.0 ? d : 2.0);
+        }
+    }
+
+    /* ---- export counters ---- */
+    oi[0] = S->n_acc; oi[1] = S->wb_lines; oi[2] = S->pf_dropped;
+    oi[3] = S->dir_inv; oi[4] = S->dir_c2c; oi[5] = S->dir_upg;
+    oi[6] = S->mem.migrations; oi[7] = S->mem.migration_bytes;
+    oi[8] = S->mem.dram.bytes; oi[9] = S->mem.dram.row_hits;
+    oi[10] = S->mem.dram.accesses;
+    oi[11] = S->mem.has_hbm ? S->mem.hbm.bytes : 0;
+    oi[12] = S->mem.has_hbm ? S->mem.hbm.row_hits : 0;
+    oi[13] = S->mem.has_hbm ? S->mem.hbm.accesses : 0;
+    oi[14] = S->l1.evict; oi[15] = S->l1.dirty_ev; oi[16] = S->l1.pfill;
+    oi[17] = S->l2.evict; oi[18] = S->l2.dirty_ev; oi[19] = S->l2.pfill;
+    oi[20] = S->has_l3 ? S->l3.evict : 0;
+    oi[21] = S->has_l3 ? S->l3.dirty_ev : 0;
+    oi[22] = S->has_l3 ? S->l3.pfill : 0;
+    oi[23] = S->l3h; oi[24] = S->l3mi; oi[25] = S->l3pu;
+    for (int64_t r = 0; r < 8; r++) {
+        oi[26 + r] = S->l1h[r];
+        oi[34 + r] = S->l1mi[r];
+        oi[42 + r] = S->l1pu[r];
+        oi[50 + r] = S->l2h[r];
+        oi[58 + r] = S->l2mi[r];
+        oi[66 + r] = S->l2pu[r];
+        oi[74 + r] = (S->pf_on && r < S->n_req) ? S->stride[r].issued : 0;
+        oi[82 + r] = (S->pf_on && S->ml_on && r < S->n_req)
+            ? S->ml[r].issued : 0;
+        oi[90 + r] = (S->pf_on && S->ml_on && r < S->n_req)
+            ? S->ml[r].trained : 0;
+    }
+    for (int r = 0; r < 8; r++) od[r] = S->time[r];
+    od[8] = S->lat_sum;
+    od[9] = S->mem.mig_stall;
+
+    /* ---- teardown ---- */
+    for (int64_t r = 0; r < S->n_req; r++) {
+        if (S->pf_on) {
+            fifo_free(&S->stride[r].table);
+            map_free(&S->stride[r].acc);
+            fifo_free(&S->stride[r].pending);
+        }
+        if (S->pf_on && S->ml_on) {
+            fifo_free(&S->ml[r].hist);
+            mk_free(&S->ml[r].markov);
+            fifo_free(&S->ml[r].pending);
+            free(S->ml[r].w_pc); free(S->ml[r].w_d1); free(S->ml[r].w_d2);
+        }
+    }
+    free(S->stride); free(S->ml);
+    cache_free(&S->l1); cache_free(&S->l2);
+    if (S->has_l3) cache_free(&S->l3);
+    map_free(&S->mem.heat); map_free(&S->mem.persist);
+    map_free(&S->mem.loc); free(S->mem.loc_order);
+    map_free(&S->dir);
+}

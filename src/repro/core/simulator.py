@@ -72,7 +72,24 @@ class Metrics:
 
 
 class HierarchySim:
-    def __init__(self, sp: SystemParams):
+    """Reference (object-based) engine, and factory for the SoA engine.
+
+    ``HierarchySim(sp)`` builds the authoritative object engine — the
+    oracle every optimization is validated against.  ``HierarchySim(sp,
+    engine="soa")`` returns the structure-of-arrays engine
+    (``engine_soa.SoAHierarchySim``), which is bit-identical in counters
+    and Metrics but ~10× faster on trace-driven runs.
+    """
+
+    def __new__(cls, sp: SystemParams, engine: str = "object"):
+        if cls is HierarchySim and engine == "soa":
+            from repro.core.engine_soa import SoAHierarchySim
+            return SoAHierarchySim(sp)
+        if engine not in ("object", "soa"):
+            raise ValueError(f"unknown engine {engine!r}")
+        return super().__new__(cls)
+
+    def __init__(self, sp: SystemParams, engine: str = "object"):
         self.sp = sp
         self.n_req = sp.n_cores + (1 if sp.accel_port else 0)
         self.l1 = [Cache(sp.l1) for _ in range(self.n_req)]
@@ -335,67 +352,75 @@ class HierarchySim:
         for i in range(n):
             acc(int(core[i]), int(pc[i]), int(addr[i]), bool(write[i]),
                 int(tensor[i]), int(reuse[i]))
-        return self._metrics(trace)
-
-    def _metrics(self, trace: Dict) -> Metrics:
-        sp = self.sp
-        elapsed = max(self.time) if self.time else 1.0
-        l1_acc = sum(c.accesses for c in self.l1)
-        l1_hits = sum(c.hits for c in self.l1)
-        l2_acc = sum(c.accesses for c in self.l2)
-        l2_hits = sum(c.hits for c in self.l2)
-        l3_acc = self.l3.accesses if self.l3 else 0
-        l3_hits = self.l3.hits if self.l3 else 0
-        c2c = self.dir.c2c_transfers if self.dir else 0
-        served_by_cache = l1_hits + l2_hits + l3_hits + c2c
-        dram_lines = self.mem.dram.bytes_transferred // LINE_SIZE
-        hbm_lines = (self.mem.hbm.bytes_transferred // LINE_SIZE
-                     if self.mem.hbm else 0)
-        counters = {
-            "l1_accesses": l1_acc,
-            "l2_accesses": l2_acc,
-            "l3_accesses": l3_acc,
-            "dram_lines": dram_lines,
-            "dram_row_hits": self.mem.dram.row_hits,
-            "hbm_lines": hbm_lines,
-            "hbm_row_hits": (self.mem.hbm.row_hits if self.mem.hbm else 0),
-            "coherence_msgs": (self.dir.invalidations + c2c) if self.dir else 0,
-            "prefetches": sum(p.issued for p in self.pf),
-            "migrations": self.mem.migrations,
-            "migration_lines": self.mem.migration_bytes // LINE_SIZE,
-        }
-        em = EnergyModel()
-        elapsed_ns = sp.cycles_to_ns(elapsed)
-        return Metrics(
-            name=sp.name,
-            workload=trace["name"],
-            avg_latency_ns=sp.cycles_to_ns(self.lat_sum / max(1, self.n_acc)),
-            # paper Table I bandwidth = rate at which data is transferred
-            # between the memory system and the processor/accelerator:
-            # request-granularity words (8 B) on L1 hits, full line
-            # transfers (64 B) for everything that moves through the
-            # hierarchy.  Rises as caching/prefetching shortens the run.
-            bandwidth_gbps=(l1_hits * 8 + (self.n_acc - l1_hits) * LINE_SIZE)
-                           / max(elapsed_ns, 1e-9),
-            hit_rate=served_by_cache / max(1, self.n_acc),
-            l1_hit_rate=l1_hits / max(1, l1_acc),
-            l2_hit_rate=l2_hits / max(1, l2_acc),
-            l3_hit_rate=l3_hits / max(1, l3_acc) if l3_acc else 0.0,
-            energy_uj_per_op=em.uj_per_op(counters,
-                                          trace["meta"]["n_macro_ops"],
-                                          elapsed_ns=elapsed_ns),
-            elapsed_ns=elapsed_ns,
-            dram_lines=dram_lines,
-            hbm_lines=hbm_lines,
-            hbm_fraction=self.mem.hbm_fraction,
-            invalidations=self.dir.invalidations if self.dir else 0,
-            c2c_transfers=c2c,
-            prefetches_issued=sum(p.issued for p in self.pf),
-            prefetch_useful=(sum(c.prefetch_useful for c in self.l2)
-                             + (self.l3.prefetch_useful if self.l3 else 0)),
-            migrations=self.mem.migrations,
-        )
+        return compute_metrics(self, trace)
 
 
-def simulate(sp: SystemParams, trace: Dict) -> Metrics:
-    return HierarchySim(sp).run(trace)
+def compute_metrics(sim, trace: Dict) -> Metrics:
+    """Build the Metrics row from a finished sim's counters.
+
+    Duck-typed over the engine: both ``HierarchySim`` (object engine) and
+    ``engine_soa.SoAHierarchySim`` expose the same counter surface, so
+    the two engines share one metrics definition by construction.
+    """
+    sp = sim.sp
+    elapsed = max(sim.time) if sim.time else 1.0
+    l1_acc = sum(c.accesses for c in sim.l1)
+    l1_hits = sum(c.hits for c in sim.l1)
+    l2_acc = sum(c.accesses for c in sim.l2)
+    l2_hits = sum(c.hits for c in sim.l2)
+    l3_acc = sim.l3.accesses if sim.l3 else 0
+    l3_hits = sim.l3.hits if sim.l3 else 0
+    c2c = sim.dir.c2c_transfers if sim.dir else 0
+    served_by_cache = l1_hits + l2_hits + l3_hits + c2c
+    dram_lines = sim.mem.dram.bytes_transferred // LINE_SIZE
+    hbm_lines = (sim.mem.hbm.bytes_transferred // LINE_SIZE
+                 if sim.mem.hbm else 0)
+    counters = {
+        "l1_accesses": l1_acc,
+        "l2_accesses": l2_acc,
+        "l3_accesses": l3_acc,
+        "dram_lines": dram_lines,
+        "dram_row_hits": sim.mem.dram.row_hits,
+        "hbm_lines": hbm_lines,
+        "hbm_row_hits": (sim.mem.hbm.row_hits if sim.mem.hbm else 0),
+        "coherence_msgs": (sim.dir.invalidations + c2c) if sim.dir else 0,
+        "prefetches": sum(p.issued for p in sim.pf),
+        "migrations": sim.mem.migrations,
+        "migration_lines": sim.mem.migration_bytes // LINE_SIZE,
+    }
+    em = EnergyModel()
+    elapsed_ns = sp.cycles_to_ns(elapsed)
+    return Metrics(
+        name=sp.name,
+        workload=trace["name"],
+        avg_latency_ns=sp.cycles_to_ns(sim.lat_sum / max(1, sim.n_acc)),
+        # paper Table I bandwidth = rate at which data is transferred
+        # between the memory system and the processor/accelerator:
+        # request-granularity words (8 B) on L1 hits, full line
+        # transfers (64 B) for everything that moves through the
+        # hierarchy.  Rises as caching/prefetching shortens the run.
+        bandwidth_gbps=(l1_hits * 8 + (sim.n_acc - l1_hits) * LINE_SIZE)
+                       / max(elapsed_ns, 1e-9),
+        hit_rate=served_by_cache / max(1, sim.n_acc),
+        l1_hit_rate=l1_hits / max(1, l1_acc),
+        l2_hit_rate=l2_hits / max(1, l2_acc),
+        l3_hit_rate=l3_hits / max(1, l3_acc) if l3_acc else 0.0,
+        energy_uj_per_op=em.uj_per_op(counters,
+                                      trace["meta"]["n_macro_ops"],
+                                      elapsed_ns=elapsed_ns),
+        elapsed_ns=elapsed_ns,
+        dram_lines=dram_lines,
+        hbm_lines=hbm_lines,
+        hbm_fraction=sim.mem.hbm_fraction,
+        invalidations=sim.dir.invalidations if sim.dir else 0,
+        c2c_transfers=c2c,
+        prefetches_issued=sum(p.issued for p in sim.pf),
+        prefetch_useful=(sum(c.prefetch_useful for c in sim.l2)
+                         + (sim.l3.prefetch_useful if sim.l3 else 0)),
+        migrations=sim.mem.migrations,
+    )
+
+
+def simulate(sp: SystemParams, trace: Dict,
+             engine: str = "object") -> Metrics:
+    return HierarchySim(sp, engine=engine).run(trace)

@@ -237,7 +237,7 @@ def transformer_trace(scale: float = 1.0, seed: int = 2) -> Dict:
     b.add(GEMMINI, 600, wf_id, REUSE_RESIDENT, False,
           b.walk(wf_base, 2560 << 10, reps=2, step_lines=2))
     b.add(GEMMINI, 610, act_id, REUSE_STREAMING, False,
-          b.stream(act_base + 48 << 20, n(22_000)))
+          b.stream(act_base + (48 << 20), n(22_000)))
     b.n_macro = n(4_800)
     return _finish(b)
 

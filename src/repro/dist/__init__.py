@@ -1,0 +1,1 @@
+"""Distribution layer: GSPMD sharding specs + gradient compression."""

@@ -1,0 +1,182 @@
+"""GSPMD sharding specs for every architecture family.
+
+Spec trees are derived *from the parameter shapes themselves*
+(``jax.eval_shape`` over the real initializers), so they mirror the
+param/cache pytrees exactly by construction — a new leaf in the model
+automatically gets a spec, and structure tests can never drift.
+
+Layout policy (DESIGN §4, mirrors ``models/layers.py`` axis conventions):
+
+* parameters are 2-D sharded — TP on ``model`` over the last dim, FSDP
+  on ``data`` (or ``("pod", "data")`` with ``fsdp_pod``) over the
+  second-to-last dim;
+* a dim is sharded only when it is a genuine matrix dim (≥ 128: leading
+  layer-stack axes scanned by ``lax.scan`` stay replicated) and divides
+  the production axis sizes (16 × 16 × pod 2), so pjit I/O divisibility
+  holds on every mesh;
+* decode caches shard batch over the data axes and KV heads over
+  ``model`` when divisible;
+* everything else (norm scales, gates, biases) is replicated.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+
+#: activation batch axes (pod-DP × data-DP/FSDP) — matches layers.DATA
+BATCH = ("pod", "data")
+MODEL = "model"
+
+#: production axis sizes the divisibility rules are checked against
+_AXIS_SIZES = {"data": 16, "model": 16, "pod": 2}
+#: dims smaller than this are never sharded (layer-stack axes, LoRA
+#: ranks, conv taps — all < 128; real matrix dims are all ≥ 128)
+_MIN_SHARD_DIM = 128
+
+
+def _is_spec(x) -> bool:
+    return isinstance(x, P)
+
+
+def filter_spec(spec: P, axes: Tuple[str, ...]) -> P:
+    """Drop mesh axes not present in ``axes`` (e.g. ``pod`` on the
+    single-pod mesh); tuple entries stay tuples, empty entries → None."""
+    def keep(e):
+        if e is None:
+            return None
+        if isinstance(e, str):
+            return e if e in axes else None
+        t = tuple(a for a in e if a in axes)
+        return t if t else None
+    return P(*(keep(e) for e in spec))
+
+
+def named(tree: Any, mesh) -> Any:
+    """P tree → NamedSharding tree, filtered to the mesh's axes."""
+    axes = tuple(mesh.axis_names)
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, filter_spec(s, axes)),
+        tree, is_leaf=_is_spec)
+
+
+def constrain_tree(x: Any, spec: P) -> Any:
+    """with_sharding_constraint over a pytree; no-op without a mesh."""
+    from repro.models.layers import ambient_mesh
+    mesh = ambient_mesh()
+    if mesh is None:
+        return x
+    fs = filter_spec(spec, tuple(mesh.axis_names))
+    return jax.tree.map(
+        lambda a: jax.lax.with_sharding_constraint(a, fs), x)
+
+
+# ---------------------------------------------------------------------------
+# parameter specs
+# ---------------------------------------------------------------------------
+def param_specs(cfg: ModelConfig, fsdp_pod: bool = False) -> Any:
+    """PartitionSpec tree mirroring ``model.init_params(cfg, ...)``.
+
+    ``fsdp_pod`` repoints every FSDP (``data``) dim to ``("pod",
+    "data")`` so parameter state is sharded across pods too (halves
+    per-chip optimizer state on the multi-pod mesh for one cross-DCN
+    all-gather per layer).
+    """
+    from repro.models import model as mdl
+    shapes = jax.eval_shape(
+        lambda: mdl.init_params(cfg, jax.random.PRNGKey(0)))
+    data_ax = ("pod", "data") if fsdp_pod else "data"
+    data_div = _AXIS_SIZES["data"] * _AXIS_SIZES["pod"]
+    model_div = _AXIS_SIZES["model"]
+
+    def spec_for(path, leaf):
+        shp = leaf.shape
+        nd = len(shp)
+        if nd < 2:
+            return P()                       # scalars / norm vectors
+        dims = [None] * nd
+        if shp[-1] >= _MIN_SHARD_DIM and shp[-1] % model_div == 0:
+            dims[-1] = MODEL                 # TP over the output dim
+        if shp[-2] >= _MIN_SHARD_DIM and shp[-2] % data_div == 0:
+            dims[-2] = data_ax               # FSDP over the input dim
+        return P(*dims)
+
+    return jax.tree_util.tree_map_with_path(spec_for, shapes)
+
+
+# ---------------------------------------------------------------------------
+# decode-cache specs
+# ---------------------------------------------------------------------------
+def _path_name(key) -> str:
+    for attr in ("name", "key", "idx"):
+        v = getattr(key, attr, None)
+        if v is not None:
+            return str(v)
+    return str(key)
+
+
+def cache_specs(cfg: ModelConfig, batch: int, mesh) -> Any:
+    """PartitionSpec tree mirroring ``model.init_cache(cfg, batch, ...)``.
+
+    Batch dims shard over the mesh's data axes (when the global batch
+    divides them); KV head dims shard over ``model`` when divisible.
+    Works with any mesh-like object exposing ``axis_names``/``shape``.
+    """
+    from repro.models import model as mdl
+    shapes = jax.eval_shape(
+        lambda: mdl.init_cache(cfg, batch, 8,
+                               img_tokens=cfg.n_img_tokens or 1))
+    axes = tuple(getattr(mesh, "axis_names", ()) or ())
+    sizes = dict(getattr(mesh, "shape", {}) or {})
+    baxes = tuple(a for a in ("pod", "data") if a in axes)
+    prod = 1
+    for a in baxes:
+        prod *= sizes.get(a, 1)
+    batch_entry = baxes if (baxes and batch % max(1, prod) == 0) else None
+    model_size = sizes.get(MODEL, 1)
+    ver = cfg.ssm_version
+
+    def spec_for(path, leaf):
+        nd = len(leaf.shape)
+        name = _path_name(path[-1])
+        dims = [None] * nd
+        if name in ("k", "v"):               # (..., B, S|nit, n_kv, hd)
+            bpos = nd - 4
+            if (MODEL in axes and leaf.shape[-2] % model_size == 0
+                    and leaf.shape[-2] >= model_size):
+                dims[-2] = MODEL             # shard KV heads
+        elif name == "length":               # (..., B)
+            bpos = nd - 1
+        elif name == "conv":                 # (..., B, W-1, C)
+            bpos = nd - 3
+        elif name == "state":                # v1 (..., B, d, N) | v2 (..., B, H, N, P)
+            bpos = nd - 3 if ver == 1 else nd - 4
+        else:
+            bpos = None
+        if bpos is not None and bpos >= 0 and batch_entry is not None:
+            dims[bpos] = batch_entry
+        return P(*dims)
+
+    return jax.tree_util.tree_map_with_path(spec_for, shapes)
+
+
+# ---------------------------------------------------------------------------
+# I/O specs
+# ---------------------------------------------------------------------------
+def io_batch_spec(global_batch: int, mesh, n_extra: int,
+                  trailing: Tuple = ()) -> P:
+    """Spec for a batch-leading I/O array: batch over the data axes when
+    divisible, ``n_extra`` replicated middle dims, then ``trailing``
+    entries verbatim (e.g. a vocab dim over ``model`` for logits)."""
+    axes = tuple(getattr(mesh, "axis_names", ()) or ())
+    sizes = dict(getattr(mesh, "shape", {}) or {})
+    baxes = tuple(a for a in ("pod", "data") if a in axes)
+    prod = 1
+    for a in baxes:
+        prod *= sizes.get(a, 1)
+    first = baxes if (baxes and global_batch % max(1, prod) == 0) else None
+    return P(first, *([None] * n_extra), *tuple(trailing))

@@ -287,7 +287,9 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
     t0 = time.time()
     try:
         from repro.launch.hlo_analysis import analyze
-        with jax.sharding.set_mesh(mesh):
+        # jax >= 0.5 has set_mesh; 0.4.x uses the Mesh context manager
+        set_mesh = getattr(jax.sharding, "set_mesh", None)
+        with (set_mesh(mesh) if set_mesh is not None else mesh):
             lowered, meta = lower_cell(arch, shape_name, mesh)
             t_lower = time.time() - t0
             compiled = lowered.compile()

@@ -34,10 +34,29 @@ MODEL = "model"          # TP / EP axis
 SEQ_PARALLEL = False
 
 
+def ambient_mesh():
+    """The active mesh, or None.  Version-tolerant: newer jax exposes
+    ``jax.sharding.get_abstract_mesh`` (set_mesh contexts); jax 0.4.x
+    tracks the ambient ``with mesh:`` physical mesh on thread_resources."""
+    gam = getattr(jax.sharding, "get_abstract_mesh", None)
+    if gam is not None:
+        m = gam()
+        if m is not None and not m.empty:
+            return m
+    try:
+        from jax._src import mesh as _mesh_lib
+        m = _mesh_lib.thread_resources.env.physical_mesh
+        if m is not None and not m.empty:
+            return m
+    except Exception:
+        pass
+    return None
+
+
 def constrain(x: jax.Array, *spec) -> jax.Array:
     """with_sharding_constraint that is a no-op without a mesh context."""
-    mesh = jax.sharding.get_abstract_mesh()
-    if mesh is None or mesh.empty:
+    mesh = ambient_mesh()
+    if mesh is None:
         return x
     names = set(mesh.axis_names)
 

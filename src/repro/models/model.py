@@ -274,6 +274,23 @@ def _remat(fn, rc: RunConfig):
     return jax.checkpoint(fn, policy=policy)
 
 
+@jax.custom_jvp
+def _opt_barrier(x):
+    """optimization_barrier that is transparent to differentiation.
+
+    jax 0.4.x ships the primitive without a JVP rule; the barrier only
+    constrains XLA scheduling, so the gradient is the identity.  Newer
+    jax would work without this wrapper, but the values are the same.
+    """
+    return jax.lax.optimization_barrier(x)
+
+
+@_opt_barrier.defjvp
+def _opt_barrier_jvp(primals, tangents):
+    (x,), (t,) = primals, tangents
+    return _opt_barrier(x), t
+
+
 def _seq_shard_body(body, rc: RunConfig, enabled: bool):
     """Scan-boundary hygiene for the saved residual stream.
 
@@ -300,12 +317,12 @@ def _seq_shard_body(body, rc: RunConfig, enabled: bool):
         # body sees the full sequence immediately.
         gather_entry = enabled and not L.SEQ_PARALLEL
         if isinstance(carry, tuple):
-            h = jax.lax.optimization_barrier(carry[0])
+            h = _opt_barrier(carry[0])
             if gather_entry:
                 h = constrain(h, DATA, None, None)
             carry = (h,) + carry[1:]
         else:
-            h = jax.lax.optimization_barrier(carry)
+            h = _opt_barrier(carry)
             if gather_entry:
                 h = constrain(h, DATA, None, None)
             carry = h

@@ -3,7 +3,9 @@ over the allocation/eviction/prefetch invariants."""
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="hypothesis not installed in this environment")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.tpu.kv_cache import (PIN_RESIDENT, PIN_STREAMING, PagedKVManager)
 
