@@ -169,7 +169,19 @@ def run(scale: float = 1.0, engine: str = "soa",
     table1_latency_bandwidth(results)
     table2_hit_rate(results)
     table3_energy(results)
-    print(f"\nmonotone trend (all 4 metrics, all rows): {trend_ok(results)}")
+    ok = trend_ok(results)
+    print(f"\nmonotone trend (all 4 metrics, all rows): {ok}")
+    # the paper's headline claim is a hard invariant at full scale: each
+    # technique strictly improves all four metrics (the tensor_aware
+    # hit-rate dip that used to break this was fixed by the repro.sweep
+    # retune — see presets.py / artifacts/sweep/).  Tiny smoke scales
+    # are out of the calibrated regime and only print the verdict.
+    if scale >= 1.0:
+        assert ok, ("trend_ok regression at full scale: " + "; ".join(
+            f"{c}={{'{m}': {results[c][m]:.4f}}}"
+            for c in ("baseline", "shared_l3", "prefetch", "tensor_aware")
+            for m in ("latency_ns", "bandwidth_gbps", "hit_rate",
+                      "energy_uj")))
     rel = [abs(r["rel_err"]) for r in compare_to_paper(results)]
     print(f"mean |rel err| vs paper: {sum(rel)/len(rel):.3f} "
           f"(n={len(rel)} cells)  [{time.time()-t0:.0f}s @ scale={scale}, "

@@ -438,15 +438,24 @@ typedef struct {
     int ta_on;
     int64_t nten;
     /* tensor-aware state, one block per instance */
-    double **bucket;
+    double **bucket, **util;
     int64_t **fills, **hits, **refills, *since;
     Fifo *shadow;
+    /* tensor-aware policy knobs (params.TensorPolicyParams) */
+    int64_t ta_sample, ta_shadow, ta_decay;
+    double ta_low, ta_high, ta_pref;
 } Cache;
 
 static void cache_init(Cache *c, int64_t S, int64_t A, int64_t inst,
-                       int ta_on, int64_t nten) {
+                       int ta_on, int64_t nten,
+                       int64_t ta_sample, int64_t ta_shadow,
+                       int64_t ta_decay, double ta_low, double ta_high,
+                       double ta_pref) {
     memset(c, 0, sizeof(*c));
     c->S = S; c->A = A; c->inst = inst; c->ta_on = ta_on; c->nten = nten;
+    c->ta_sample = ta_sample; c->ta_shadow = ta_shadow;
+    c->ta_decay = ta_decay;
+    c->ta_low = ta_low; c->ta_high = ta_high; c->ta_pref = ta_pref;
     int64_t sb = 0;
     while ((1LL << sb) < S) sb++;
     c->sbits = sb;
@@ -462,6 +471,7 @@ static void cache_init(Cache *c, int64_t S, int64_t A, int64_t inst,
     c->ready = calloc(nslot, sizeof(double));
     if (ta_on) {
         c->bucket = malloc(inst * sizeof(double *));
+        c->util = malloc(inst * sizeof(double *));
         c->fills = malloc(inst * sizeof(int64_t *));
         c->hits = malloc(inst * sizeof(int64_t *));
         c->refills = malloc(inst * sizeof(int64_t *));
@@ -470,10 +480,12 @@ static void cache_init(Cache *c, int64_t S, int64_t A, int64_t inst,
         for (int64_t i = 0; i < inst; i++) {
             c->bucket[i] = malloc(nten * sizeof(double));
             for (int64_t t = 0; t < nten; t++) c->bucket[i][t] = 3.0;
+            c->util[i] = malloc(nten * sizeof(double));
+            for (int64_t t = 0; t < nten; t++) c->util[i][t] = 1.0;
             c->fills[i] = calloc(nten, sizeof(int64_t));
             c->hits[i] = calloc(nten, sizeof(int64_t));
             c->refills[i] = calloc(nten, sizeof(int64_t));
-            fifo_init(&c->shadow[i], 16384, 0);
+            fifo_init(&c->shadow[i], c->ta_shadow, 0);
         }
     }
 }
@@ -483,11 +495,11 @@ static void cache_free(Cache *c) {
     free(c->pref); free(c->reu); free(c->ten); free(c->last); free(c->ready);
     if (c->ta_on) {
         for (int64_t i = 0; i < c->inst; i++) {
-            free(c->bucket[i]); free(c->fills[i]); free(c->hits[i]);
-            free(c->refills[i]); fifo_free(&c->shadow[i]);
+            free(c->bucket[i]); free(c->util[i]); free(c->fills[i]);
+            free(c->hits[i]); free(c->refills[i]); fifo_free(&c->shadow[i]);
         }
-        free(c->bucket); free(c->fills); free(c->hits); free(c->refills);
-        free(c->since); free(c->shadow);
+        free(c->bucket); free(c->util); free(c->fills); free(c->hits);
+        free(c->refills); free(c->since); free(c->shadow);
     }
 }
 
@@ -497,10 +509,12 @@ static void ta_bucket(Cache *c, int64_t inst, int32_t t) {
     if (f == 0) {
         u = 1.0;
     } else {
-        u = (double)(c->hits[inst][t] + 16 * c->refills[inst][t]) / (double)f;
+        u = (double)(c->hits[inst][t]
+                     + c->ta_sample * c->refills[inst][t]) / (double)f;
         if (u > 4.0) u = 4.0;
     }
-    c->bucket[inst][t] = u < 0.05 ? 1.0 : (u < 0.5 ? 2.0 : 3.0);
+    c->util[inst][t] = u;
+    c->bucket[inst][t] = u < c->ta_low ? 1.0 : (u < c->ta_high ? 2.0 : 3.0);
 }
 
 static void ta_hit(Cache *c, int64_t inst, int32_t t) {
@@ -510,17 +524,17 @@ static void ta_hit(Cache *c, int64_t inst, int32_t t) {
 
 static void ta_fill(Cache *c, int64_t inst, int32_t t, int64_t blk) {
     c->fills[inst][t]++;
-    if (blk >= 0 && pmod_hash(blk, 16) == 0) {
+    if (blk >= 0 && pmod_hash(blk, c->ta_sample) == 0) {
         Fifo *sh = &c->shadow[inst];
         if (fifo_get(sh, blk)) {
             c->refills[inst][t]++;
         } else {
-            if (fifo_len(sh) >= 16384) fifo_evict_oldest(sh, 0, 0, 0);
+            if (fifo_len(sh) >= c->ta_shadow) fifo_evict_oldest(sh, 0, 0, 0);
             fifo_put(sh, blk);
         }
     }
     c->since[inst]++;
-    if (c->since[inst] >= 16384) {
+    if (c->since[inst] >= c->ta_decay) {
         c->since[inst] = 0;
         for (int64_t k = 0; k < c->nten; k++) {
             c->fills[inst][k] >>= 1;
@@ -575,7 +589,7 @@ static int c_insert(Cache *c, int64_t si, int64_t s, int64_t tag,
                 for (int64_t w = 0; w < c->A; w++) {
                     int64_t sl = base + w;
                     double b;
-                    if (c->pref[sl]) b = 2.5;
+                    if (c->pref[sl]) b = c->ta_pref;
                     else if (c->reu[sl] == 0) b = 0.0;
                     else b = bucket[c->ten[sl]];
                     double lt = c->last[sl];
@@ -793,6 +807,7 @@ typedef struct {
     int64_t hl1, hl2, hl3;
     int64_t st_tsize, st_conf, st_deg, ml_tsize, ml_hist;
     double ml_thresh, core_mlp, accel_mlp, c2c_lat, inv_lat, pf_throttle;
+    double ta_bypass;
     double time[8], lat_sum;
     int64_t n_acc, wb_lines, pf_dropped;
     int64_t dir_inv, dir_c2c, dir_upg;
@@ -824,8 +839,8 @@ static void fill_shared(Sim *S, int64_t addr, int64_t blk, int32_t ten,
                         int reu, double now, int prefetched, int is_write) {
     if (!S->has_l3) return;
     if (S->l3.ta_on && reu == 0 && !prefetched && !is_write
-            && S->l3.bucket[0][ten] == 1.0)
-        return;                 /* bucket 1.0 <=> measured utility < 0.05 */
+            && S->l3.util[0][ten] < S->ta_bypass)
+        return;                 /* measured utility below the bypass knob */
     int64_t s3 = blk & S->S3m;
     int64_t vaddr;
     int vd;
@@ -933,12 +948,14 @@ enum { CI_NREQ, CI_NCORES, CI_S1, CI_A1, CI_S2, CI_A2, CI_S3, CI_A3,
        CI_HASL3, CI_MESI, CI_PFON, CI_MLON, CI_TA1, CI_TA2, CI_TA3,
        CI_HYBRID, CI_NTEN, CI_ST_TSIZE, CI_ST_CONF, CI_ST_DEG,
        CI_ML_TSIZE, CI_ML_HIST, CI_HP_HOT, CI_HP_WINDOW, CI_HL1, CI_HL2,
-       CI_HL3, CI_HBM_PAGES_MAX, CI_COUNT };
+       CI_HL3, CI_HBM_PAGES_MAX, CI_TA_SAMPLE, CI_TA_SHADOW, CI_TA_DECAY,
+       CI_COUNT };
 
 /* double-config indices */
 enum { CD_ML_THRESH, CD_HP_MIGCOST, CD_D_BL, CD_D_RHL, CD_D_BW, CD_D_GAP,
        CD_D_RBB, CD_H_BL, CD_H_RHL, CD_H_BW, CD_H_GAP, CD_H_RBB,
        CD_CORE_MLP, CD_ACCEL_MLP, CD_C2C, CD_INV, CD_PF_THROTTLE,
+       CD_TA_LOW, CD_TA_HIGH, CD_TA_PREF, CD_TA_BYPASS,
        CD_COUNT };
 
 void run_trace(const int64_t *ci, const double *cd,
@@ -952,11 +969,19 @@ void run_trace(const int64_t *ci, const double *cd,
     S->n_req = ci[CI_NREQ];
     S->n_cores = ci[CI_NCORES];
     int64_t nten = ci[CI_NTEN];
-    cache_init(&S->l1, ci[CI_S1], ci[CI_A1], S->n_req, ci[CI_TA1], nten);
-    cache_init(&S->l2, ci[CI_S2], ci[CI_A2], S->n_req, ci[CI_TA2], nten);
+    int64_t tas = ci[CI_TA_SAMPLE], tash = ci[CI_TA_SHADOW],
+            tad = ci[CI_TA_DECAY];
+    double tal = cd[CD_TA_LOW], tah = cd[CD_TA_HIGH],
+           tap = cd[CD_TA_PREF];
+    cache_init(&S->l1, ci[CI_S1], ci[CI_A1], S->n_req, ci[CI_TA1], nten,
+               tas, tash, tad, tal, tah, tap);
+    cache_init(&S->l2, ci[CI_S2], ci[CI_A2], S->n_req, ci[CI_TA2], nten,
+               tas, tash, tad, tal, tah, tap);
     S->has_l3 = ci[CI_HASL3];
     if (S->has_l3)
-        cache_init(&S->l3, ci[CI_S3], ci[CI_A3], 1, ci[CI_TA3], nten);
+        cache_init(&S->l3, ci[CI_S3], ci[CI_A3], 1, ci[CI_TA3], nten,
+                   tas, tash, tad, tal, tah, tap);
+    S->ta_bypass = cd[CD_TA_BYPASS];
     S->mesi = ci[CI_MESI];
     S->pf_on = ci[CI_PFON];
     S->ml_on = ci[CI_MLON];

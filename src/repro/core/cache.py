@@ -54,7 +54,7 @@ class Cache:
         # sets[i] maps tag -> Line; insertion order is irrelevant (policy
         # decides victims), dict gives O(1) lookup.
         self.sets: List[Dict[int, Line]] = [dict() for _ in range(self.n_sets)]
-        self.policy: ReplacementPolicy = make_policy(params.policy)
+        self.policy: ReplacementPolicy = make_policy(params.policy, params.ta)
         # statistics
         self.hits = 0
         self.misses = 0

@@ -52,11 +52,20 @@ _INF = float("inf")
 # per-cache SoA state
 # ---------------------------------------------------------------------------
 class _TAState:
-    """Tensor-aware policy state (mirrors tensor_cache.TensorAwarePolicy)."""
+    """Tensor-aware policy state (mirrors tensor_cache.TensorAwarePolicy).
 
-    __slots__ = ("fills", "hitsd", "refills", "shadow", "since", "bucket")
+    Knobs come from ``params.TensorPolicyParams`` so sweep points can
+    retune the policy; defaults reproduce the original constants."""
 
-    def __init__(self):
+    __slots__ = ("fills", "hitsd", "refills", "shadow", "since", "bucket",
+                 "util", "sample", "shadow_max", "decay", "low", "high")
+
+    def __init__(self, tp):
+        self.sample = tp.sample
+        self.shadow_max = tp.shadow_max
+        self.decay = tp.decay_fills
+        self.low = tp.low_utility
+        self.high = tp.high_utility
         self.fills: Dict[int, int] = {}
         self.hitsd: Dict[int, int] = {}
         self.refills: Dict[int, int] = {}
@@ -66,6 +75,10 @@ class _TAState:
         # every fill/hit/decay so it always equals the reference's
         # utility-derived bucket.  Unknown tensors are optimistic (3.0).
         self.bucket: Dict[int, float] = {}
+        # tensor -> clamped utility quotient (reference .utility());
+        # read by the L3 streaming-bypass check, which may use a
+        # different threshold than the bucket boundaries.
+        self.util: Dict[int, float] = {}
 
 
 def _ta_bucket(T: _TAState, t: int) -> None:
@@ -73,11 +86,12 @@ def _ta_bucket(T: _TAState, t: int) -> None:
     if f == 0:
         u = 1.0
     else:
-        u = (T.hitsd.get(t, 0) + 16 * T.refills.get(t, 0)) / f
+        u = (T.hitsd.get(t, 0) + T.sample * T.refills.get(t, 0)) / f
         # reference clamps at 4.0; irrelevant for bucketing but kept
         if u > 4.0:
             u = 4.0
-    T.bucket[t] = 1.0 if u < 0.05 else (2.0 if u < 0.5 else 3.0)
+    T.util[t] = u
+    T.bucket[t] = 1.0 if u < T.low else (2.0 if u < T.high else 3.0)
 
 
 def _ta_hit(T: _TAState, t: int) -> None:
@@ -87,16 +101,16 @@ def _ta_hit(T: _TAState, t: int) -> None:
 
 def _ta_fill(T: _TAState, t: int, blk: int) -> None:
     T.fills[t] = T.fills.get(t, 0) + 1
-    if blk >= 0 and (blk * 2654435761) % 16 == 0:
+    if blk >= 0 and (blk * 2654435761) % T.sample == 0:
         sh = T.shadow
         if blk in sh:
             T.refills[t] = T.refills.get(t, 0) + 1
         else:
-            if len(sh) >= 16384:
+            if len(sh) >= T.shadow_max:
                 sh.pop(next(iter(sh)))
             sh[blk] = None
     T.since += 1
-    if T.since >= 16384:
+    if T.since >= T.decay:
         T.since = 0
         for d in (T.fills, T.hitsd, T.refills):
             for k in list(d):
@@ -149,7 +163,7 @@ class _CacheState:
         self.private = n_inst > 1
         # one policy instance per requestor, mirroring make_policy() being
         # called once per reference Cache (separate utility monitors!)
-        self.ta = ([_TAState() for _ in range(n_inst)]
+        self.ta = ([_TAState(params.ta) for _ in range(n_inst)]
                    if params.policy == "tensor_aware" else None)
         self.hits = 0
         self.misses = 0
@@ -208,6 +222,7 @@ def _make_insert(C: _CacheState, track_pf: bool = False):
     S = C.n_sets
     sb = C.set_bits
     lru = ta is None
+    pref_rank = C.params.ta.prefetch_rank
 
     seq = C.seq
     fast_lru = lru and C.private
@@ -258,7 +273,7 @@ def _make_insert(C: _CacheState, track_pf: bool = False):
                 for tg, wy in m.items():
                     sl = base + wy
                     if pref_l[sl]:
-                        b = 2.5
+                        b = pref_rank
                     elif reuse_l[sl] == 0:  # REUSE_STREAMING
                         b = 0.0
                     else:
@@ -730,7 +745,8 @@ class SoAHierarchySim:
             s3_mask = S3 - 1
             l3_map = L3.maps
             l3_ta = L3.ta[0] if L3.ta is not None else None
-            l3_bucket = l3_ta.bucket if l3_ta is not None else None
+            l3_util = l3_ta.util if l3_ta is not None else None
+            l3_bypass = sp.l3.ta.bypass_utility if sp.l3 is not None else 0.0
         m1s, m2s = L1.maps, L2.maps
         l1_dirty, l1_last = L1.dirty, L1.last
         l1_pref, l1_ready, l1_tensor = L1.pref, L1.ready, L1.tensor
@@ -801,8 +817,9 @@ class SoAHierarchySim:
             if not has_l3:
                 return
             if (l3_ta is not None and reu == 0 and not prefetched
-                    and not is_write and l3_bucket.get(ten, 3.0) == 1.0):
-                return          # bucket 1.0 <=> measured utility < 0.05
+                    and not is_write
+                    and l3_util.get(ten, 1.0) < l3_bypass):
+                return          # measured utility below the bypass knob
             si3 = blk & s3_mask
             v = ins3(si3, si3, blk >> s3_bits, blk, ten, reu,
                      now, False, prefetched, 0.0)

@@ -29,12 +29,14 @@ _BUILD = Path(__file__).resolve().parent / "_build"
  CI_HASL3, CI_MESI, CI_PFON, CI_MLON, CI_TA1, CI_TA2, CI_TA3,
  CI_HYBRID, CI_NTEN, CI_ST_TSIZE, CI_ST_CONF, CI_ST_DEG,
  CI_ML_TSIZE, CI_ML_HIST, CI_HP_HOT, CI_HP_WINDOW, CI_HL1, CI_HL2,
- CI_HL3, CI_HBM_PAGES_MAX, CI_COUNT) = range(29)
+ CI_HL3, CI_HBM_PAGES_MAX, CI_TA_SAMPLE, CI_TA_SHADOW, CI_TA_DECAY,
+ CI_COUNT) = range(32)
 
 (CD_ML_THRESH, CD_HP_MIGCOST, CD_D_BL, CD_D_RHL, CD_D_BW, CD_D_GAP,
  CD_D_RBB, CD_H_BL, CD_H_RHL, CD_H_BW, CD_H_GAP, CD_H_RBB,
  CD_CORE_MLP, CD_ACCEL_MLP, CD_C2C, CD_INV, CD_PF_THROTTLE,
- CD_COUNT) = range(18)
+ CD_TA_LOW, CD_TA_HIGH, CD_TA_PREF, CD_TA_BYPASS,
+ CD_COUNT) = range(22)
 
 _lib = None
 _lib_tried = False
@@ -119,6 +121,14 @@ def run_native(sim, trace: Dict) -> bool:
             or sp.l1.line_size != 64 or sp.l2.line_size != 64
             or (sp.l3 is not None and sp.l3.line_size != 64)):
         return False
+    # one TA-knob set in the kernel: levels running the tensor-aware
+    # policy must agree on it, else fall back to the Python SoA path
+    from repro.core.params import TensorPolicyParams
+    levels = [sp.l1, sp.l2] + ([sp.l3] if sp.l3 is not None else [])
+    ta_sets = {lv.ta for lv in levels if lv.policy == "tensor_aware"}
+    if len(ta_sets) > 1:
+        return False
+    tp = ta_sets.pop() if ta_sets else TensorPolicyParams()
 
     tensor = np.ascontiguousarray(trace["tensor"], np.int32)
     nten = int(tensor.max()) + 1 if len(tensor) else 1
@@ -150,6 +160,9 @@ def run_native(sim, trace: Dict) -> bool:
     ci[CI_HL1] = sp.l1.hit_latency
     ci[CI_HL2] = sp.l2.hit_latency
     ci[CI_HBM_PAGES_MAX] = HBM_CHANNEL.capacity_bytes // PAGE_SIZE
+    ci[CI_TA_SAMPLE] = tp.sample
+    ci[CI_TA_SHADOW] = tp.shadow_max
+    ci[CI_TA_DECAY] = tp.decay_fills
 
     cd = np.zeros(CD_COUNT, np.float64)
     cd[CD_ML_THRESH] = pp.ml_threshold
@@ -164,6 +177,11 @@ def run_native(sim, trace: Dict) -> bool:
     cd[CD_CORE_MLP], cd[CD_ACCEL_MLP] = CORE_MLP, ACCEL_MLP
     cd[CD_C2C], cd[CD_INV] = C2C_LATENCY, INV_LATENCY
     cd[CD_PF_THROTTLE] = PREFETCH_THROTTLE
+    cd[CD_TA_LOW] = tp.low_utility
+    cd[CD_TA_HIGH] = tp.high_utility
+    cd[CD_TA_PREF] = tp.prefetch_rank
+    cd[CD_TA_BYPASS] = (sp.l3.ta.bypass_utility
+                        if sp.l3 is not None else 0.0)
 
     core = np.ascontiguousarray(trace["core"], np.int32)
     pc = np.ascontiguousarray(trace["pc"], np.int64)

@@ -25,6 +25,32 @@ PAGE_SIZE = 4096  # bytes, hybrid-memory migration granularity
 
 
 @dataclasses.dataclass(frozen=True)
+class TensorPolicyParams:
+    """Tunable knobs of the tensor-aware replacement policy.
+
+    Defaults reproduce the original hard-wired constants bit-for-bit
+    (tensor_cache.TensorAwarePolicy / engine_soa._TAState /
+    _sim_kernel.c), so existing presets are unchanged; the
+    ``repro.sweep`` explorer varies them to search the policy
+    design space.
+    """
+
+    sample: int = 16            # 1-in-N block sampling for the refill shadow
+    shadow_max: int = 16384     # sampled blocks remembered per policy
+    decay_fills: int = 16384    # fills between utility-table halvings
+    low_utility: float = 0.05   # below: "dead" bucket, shed first
+    high_utility: float = 0.5   # above: "hot" bucket, protected
+    prefetch_rank: float = 2.5  # victim rank of unused prefetched lines
+    bypass_utility: float = 0.05  # L3 fill bypass for dead streaming tensors
+
+    def __post_init__(self) -> None:
+        if self.sample < 1 or self.shadow_max < 1 or self.decay_fills < 1:
+            raise ValueError("sample/shadow_max/decay_fills must be >= 1")
+        if not (0.0 <= self.low_utility <= self.high_utility):
+            raise ValueError("need 0 <= low_utility <= high_utility")
+
+
+@dataclasses.dataclass(frozen=True)
 class CacheParams:
     """One cache level."""
 
@@ -34,6 +60,8 @@ class CacheParams:
     hit_latency: int  # cycles
     policy: str = "lru"  # "lru" | "tensor_aware"
     line_size: int = LINE_SIZE
+    ta: TensorPolicyParams = dataclasses.field(
+        default_factory=TensorPolicyParams)
 
     @property
     def n_sets(self) -> int:

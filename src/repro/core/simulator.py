@@ -164,7 +164,8 @@ class HierarchySim:
                 and reuse == 0 and not prefetched
                 and not is_write                     # 0 = REUSE_STREAMING
                 and getattr(self.l3.policy, "utility",
-                            lambda t: 1.0)(tensor) < 0.05):
+                            lambda t: 1.0)(tensor)
+                < self.l3.params.ta.bypass_utility):
             return
         victim = self.l3.insert(addr, tensor, reuse, now, prefetched=prefetched)
         if victim is not None and victim[1].dirty:

@@ -32,14 +32,13 @@ hardware-plausible mechanisms (reuse-class hint bits + UMON counters).
 
 from __future__ import annotations
 
-from typing import Dict
+from typing import Dict, Optional
+
+from repro.core.params import TensorPolicyParams
 
 REUSE_STREAMING = 0
 REUSE_MEDIUM = 1
 REUSE_RESIDENT = 2
-
-#: utility-table decay period (fills between halvings)
-_DECAY_FILLS = 16384
 
 
 class ReplacementPolicy:
@@ -71,13 +70,13 @@ class TensorAwarePolicy(ReplacementPolicy):
     a fill of a block that was already filled recently means the line was
     evicted and requested again, i.e. it *would have hit* had it been
     retained.  utility = (hits + refills) / fills.  Blocks are sampled
-    1-in-``_SAMPLE`` to bound monitor state (UMON-style set sampling).
+    1-in-``tp.sample`` to bound monitor state (UMON-style set sampling).
+    All thresholds/rates come from :class:`TensorPolicyParams` so the
+    design space is sweepable; defaults reproduce the original constants.
     """
 
-    _SAMPLE = 16
-    _SHADOW_MAX = 16384  # sampled blocks remembered per policy instance
-
-    def __init__(self):
+    def __init__(self, tp: Optional[TensorPolicyParams] = None):
+        self.tp = tp if tp is not None else TensorPolicyParams()
         self.fills: Dict[int, int] = {}
         self.hits: Dict[int, int] = {}
         self.refills: Dict[int, int] = {}
@@ -86,17 +85,18 @@ class TensorAwarePolicy(ReplacementPolicy):
 
     # -- utility monitor ----------------------------------------------------
     def on_fill(self, line, block: int = -1) -> None:
+        tp = self.tp
         t = line.tensor_id
         self.fills[t] = self.fills.get(t, 0) + 1
-        if block >= 0 and (block * 2654435761) % self._SAMPLE == 0:
+        if block >= 0 and (block * 2654435761) % tp.sample == 0:
             if block in self._shadow:
                 self.refills[t] = self.refills.get(t, 0) + 1
             else:
-                if len(self._shadow) >= self._SHADOW_MAX:
+                if len(self._shadow) >= tp.shadow_max:
                     self._shadow.pop(next(iter(self._shadow)))
                 self._shadow[block] = None
         self._since_decay += 1
-        if self._since_decay >= _DECAY_FILLS:
+        if self._since_decay >= tp.decay_fills:
             self._since_decay = 0
             for d in (self.fills, self.hits, self.refills):
                 for k in list(d):
@@ -111,7 +111,7 @@ class TensorAwarePolicy(ReplacementPolicy):
         if f == 0:
             return 1.0  # unknown: optimistic, don't punish new tensors
         score = (self.hits.get(tensor_id, 0)
-                 + self._SAMPLE * self.refills.get(tensor_id, 0))
+                 + self.tp.sample * self.refills.get(tensor_id, 0))
         return min(score / f, 4.0)
 
     # -- victim selection -----------------------------------------------------
@@ -119,6 +119,7 @@ class TensorAwarePolicy(ReplacementPolicy):
         """Streaming lines are always shed first; everything else ranks by
         a quantized utility bucket (so hot state and genuinely-reused
         resident tensors are both protected), LRU inside a bucket."""
+        tp = self.tp
         best_key, best_rank = None, None
         for tag, line in sset.items():
             if line.prefetched:
@@ -126,21 +127,23 @@ class TensorAwarePolicy(ReplacementPolicy):
                 # and the demand is imminent — protect above dead tensors
                 # (measured: ranking these at 0.5 lost 1.5pp aggregate
                 # hit rate to LRU's recency ordering)
-                rank = (2.5, line.last_touch)
+                rank = (tp.prefetch_rank, line.last_touch)
             elif line.reuse_class == REUSE_STREAMING:
                 rank = (0.0, line.last_touch)
             else:
                 u = self.utility(line.tensor_id)
-                bucket = 1.0 if u < 0.05 else (2.0 if u < 0.5 else 3.0)
+                bucket = (1.0 if u < tp.low_utility
+                          else (2.0 if u < tp.high_utility else 3.0))
                 rank = (bucket, line.last_touch)
             if best_rank is None or rank < best_rank:
                 best_key, best_rank = tag, rank
         return best_key
 
 
-def make_policy(name: str) -> ReplacementPolicy:
+def make_policy(name: str,
+                tp: Optional[TensorPolicyParams] = None) -> ReplacementPolicy:
     if name == "lru":
         return LRUPolicy()
     if name == "tensor_aware":
-        return TensorAwarePolicy()
+        return TensorAwarePolicy(tp)
     raise ValueError(f"unknown replacement policy: {name!r}")

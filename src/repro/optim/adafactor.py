@@ -64,28 +64,49 @@ def adafactor_init(params, rc: RunConfig) -> AdafactorState:
     )
 
 
-def adafactor_state_specs(pspecs):
+def adafactor_state_specs(pspecs, param_shapes=None):
     """Spec tree mirroring adafactor_init.
 
     Factored rows/cols inherit the parameter's specs with the trailing
     dim(s) dropped; we conservatively keep only the leading axes' specs
     (the reduced dims disappear).  Unfactored fallbacks reuse the param
     spec; the (1,)-shaped vc placeholders are replicated.
+
+    ``param_shapes`` (a matching pytree of shape tuples / ShapeDtypeStructs)
+    decides factored-ness EXACTLY like ``adafactor_init`` does — a leaf
+    whose spec has ≥2 axes can still be unfactored when its dims are
+    below the 128 threshold (e.g. stacked LayerNorm scales), and pinning
+    its (1,)-placeholder vc to the param's spec is a shard-mismatch
+    error under GSPMD.  Without shapes (legacy call), spec length is the
+    best available guess.
     """
     from jax.sharding import PartitionSpec as P
 
-    def vr_spec(s):
+    def _shape_of(x):
+        return tuple(x.shape) if hasattr(x, "shape") else tuple(x)
+
+    def vr_spec(s, shape=None):
+        if shape is not None and not _factored(shape):
+            return s                       # unfactored: full-v, param spec
         return P(*tuple(s)[:-1]) if len(tuple(s)) >= 1 else P()
 
-    def vc_spec(s):
+    def vc_spec(s, shape=None):
+        if shape is not None and not _factored(shape):
+            return P(None)                 # (1,) placeholder: replicated
         t = tuple(s)
         return P(*(t[:-2] + t[-1:])) if len(t) >= 2 else P(None)
 
-    return AdafactorState(
-        vr=jax.tree.map(vr_spec, pspecs, is_leaf=lambda x: isinstance(x, P)),
-        vc=jax.tree.map(vc_spec, pspecs, is_leaf=lambda x: isinstance(x, P)),
-        step=P(),
-    )
+    is_spec = lambda x: isinstance(x, P)  # noqa: E731
+    if param_shapes is None:
+        vr = jax.tree.map(vr_spec, pspecs, is_leaf=is_spec)
+        vc = jax.tree.map(vc_spec, pspecs, is_leaf=is_spec)
+    else:
+        shapes = jax.tree.map(_shape_of, param_shapes,
+                              is_leaf=lambda x: hasattr(x, "shape")
+                              or isinstance(x, tuple))
+        vr = jax.tree.map(vr_spec, pspecs, shapes, is_leaf=is_spec)
+        vc = jax.tree.map(vc_spec, pspecs, shapes, is_leaf=is_spec)
+    return AdafactorState(vr=vr, vc=vc, step=P())
 
 
 def adafactor_update(params, grads, state: AdafactorState, rc: RunConfig,

@@ -1,0 +1,25 @@
+"""Design-space exploration over the HERMES memory-hierarchy simulator.
+
+The PR-1 SoA engine made a single full-scale configuration cheap
+(~1 s/cell); this package turns that into a *systematic* explorer in the
+spirit of perceptron-Hermes (arXiv:2209.00188): enumerate grids over
+``PrefetchParams`` / ``CacheParams`` / tensor-aware policy knobs, run
+every point on ``HierarchySim(sp, engine="soa")``, collect Metrics, and
+extract the Pareto front over (latency, bandwidth, hit-rate, energy).
+
+Entry points:
+
+* :func:`repro.sweep.grid.enumerate_grid` — axes → list of override dicts
+* :func:`repro.sweep.grid.apply_point` — overrides → ``SystemParams``
+* :func:`repro.sweep.driver.run_config_sweep` — N configs × suite, parallel
+* :func:`repro.sweep.driver.run_ladder_sweep` — the preset-ladder explorer
+  used to retune the paper's ``tensor_aware`` row
+* :func:`repro.sweep.pareto.pareto_front` — non-dominated filtering
+
+CLI: ``python -m benchmarks.sweep`` (``--smoke`` for the CI-sized grid).
+"""
+
+from repro.sweep.grid import apply_point, enumerate_grid  # noqa: F401
+from repro.sweep.pareto import OBJECTIVES, pareto_front  # noqa: F401
+from repro.sweep.driver import (run_config_sweep,  # noqa: F401
+                                run_ladder_sweep)

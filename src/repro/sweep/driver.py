@@ -1,0 +1,197 @@
+"""Process-parallel sweep execution over the SoA simulation engine.
+
+Two sweep shapes:
+
+* :func:`run_config_sweep` — run N arbitrary ``SystemParams`` over the
+  paper workload suite and aggregate per config.  The generic primitive.
+
+* :func:`run_ladder_sweep` — the preset-ladder explorer: each grid point
+  rebuilds the paper's cumulative four-row ladder (baseline → shared_l3
+  → prefetch′ → tensor_aware′) where ``prefetch.*`` overrides apply to
+  BOTH HERMES rows (the narrative is cumulative) and cache/TA overrides
+  apply to the tensor_aware row only.  Per point it reports the four
+  aggregates plus the strict-monotonicity verdict
+  (``calibration.trend_ok``) — the tool that retunes the paper table.
+
+Parallelism: cells are independent, so (workload × config-chunk) tasks
+fan out over a spawn pool; each worker generates its workload trace once
+and reuses it across its chunk's configs.  Configs are deduplicated by
+value first (frozen dataclasses hash), so ladder sweeps sharing prefetch
+rows don't re-simulate them.
+"""
+
+from __future__ import annotations
+
+import os
+import time
+from typing import Any, Dict, List, Mapping, Optional, Sequence, Tuple
+
+from repro.core import trace as trace_mod
+from repro.core.calibration import aggregate_rows, trend_ok
+from repro.core.params import SystemParams
+from repro.core.presets import BASELINE, PREFETCH, SHARED_L3, TENSOR_AWARE
+from repro.core.simulator import HierarchySim
+from repro.sweep.grid import apply_point, point_label
+from repro.sweep.pareto import OBJECTIVES, pareto_front
+
+#: ladder row order, as in presets.CONFIGS / calibration.trend_ok
+LADDER = ("baseline", "shared_l3", "prefetch", "tensor_aware")
+
+
+def _chunk_cells(args: Tuple) -> List[Tuple[int, str, Dict, float]]:
+    """One worker task: all configs of one chunk on one workload.
+
+    Top-level so it pickles under the spawn start method.  Returns
+    ``[(config_index, workload, metrics_row, accesses_per_sec)]``.
+    """
+    wl_name, scale, engine, native, indexed_cfgs = args
+    tr = trace_mod.WORKLOADS[wl_name](scale=scale)
+    out = []
+    for idx, sp in indexed_cfgs:
+        sim = HierarchySim(sp, engine=engine)
+        if not native:
+            sim.native = False
+        t0 = time.perf_counter()
+        metrics = sim.run(tr)
+        dt = time.perf_counter() - t0
+        out.append((idx, wl_name, metrics.row(),
+                    len(tr["core"]) / max(dt, 1e-9)))
+    return out
+
+
+def run_config_sweep(configs: Sequence[SystemParams], scale: float = 1.0,
+                     engine: str = "soa",
+                     processes: Optional[int] = None,
+                     native: bool = True,
+                     workloads: Optional[Sequence[str]] = None,
+                     ) -> List[Dict[str, Any]]:
+    """Run every config over the workload suite; one aggregate per config.
+
+    Returns, in input order::
+
+        {"name": ..., "aggregate": {latency_ns, bandwidth_gbps, hit_rate,
+         energy_uj, per_workload}, "accesses_per_sec": {workload: rate}}
+    """
+    wls = list(workloads) if workloads is not None \
+        else list(trace_mod.WORKLOADS)
+    indexed = list(enumerate(configs))
+    processes = processes if processes is not None \
+        else min(len(wls) * max(1, len(indexed) // 4) or 1,
+                 os.cpu_count() or 1)
+    # chunk configs so every process gets work without regenerating the
+    # trace per config; ~processes tasks per workload
+    per_wl = max(1, (processes + len(wls) - 1) // len(wls))
+    csize = max(1, (len(indexed) + per_wl - 1) // per_wl)
+    chunks = [indexed[i:i + csize] for i in range(0, len(indexed), csize)]
+    tasks = [(wl, scale, engine, native, chunk)
+             for wl in wls for chunk in chunks]
+    if processes > 1 and len(tasks) > 1:
+        import multiprocessing as mp
+        # spawn keeps workers from inheriting jax/XLA state
+        with mp.get_context("spawn").Pool(processes) as pool:
+            results = pool.map(_chunk_cells, tasks)
+    else:
+        results = [_chunk_cells(t) for t in tasks]
+    rows: Dict[int, List[Tuple[str, Dict]]] = {i: [] for i, _ in indexed}
+    rates: Dict[int, Dict[str, float]] = {i: {} for i, _ in indexed}
+    for batch in results:
+        for idx, wl_name, row, rate in batch:
+            rows[idx].append((wl_name, row))
+            rates[idx][wl_name] = round(rate, 1)
+    out = []
+    for idx, sp in indexed:
+        # aggregate in canonical workload order regardless of completion
+        ordered = [row for _, row in
+                   sorted(rows[idx], key=lambda wr: wls.index(wr[0]))]
+        out.append({"name": sp.name,
+                    "aggregate": aggregate_rows(ordered),
+                    "accesses_per_sec": rates[idx]})
+    return out
+
+
+def _split_overrides(point: Mapping[str, Any]) -> Tuple[Dict, Dict]:
+    """(prefetch-row overrides, tensor_aware-row overrides).
+
+    ``prefetch.*`` paths shift both HERMES rows (cumulative ladder);
+    everything else refines only the tensor_aware row.
+    """
+    pf = {k: v for k, v in point.items() if k.startswith("prefetch.")}
+    return pf, dict(point)
+
+
+def run_ladder_sweep(points: Sequence[Mapping[str, Any]],
+                     scale: float = 1.0, engine: str = "soa",
+                     processes: Optional[int] = None,
+                     native: bool = True,
+                     objectives=OBJECTIVES) -> Dict[str, Any]:
+    """Evaluate the paper's four-row ladder for every grid point.
+
+    Returns an artifact-shaped dict: per point the four row aggregates,
+    ``trend_ok``, and the tensor_aware row's metrics; plus the Pareto
+    front (over tensor_aware rows) and the recommended point — the
+    trend-passing Pareto member with the highest hit rate (hit rate is
+    the regressed metric this explorer exists to fix), latency as the
+    tie-break.
+    """
+    # -- dedupe configs across ladders ----------------------------------
+    cfgs: List[SystemParams] = [BASELINE, SHARED_L3]
+    cfg_index: Dict[SystemParams, int] = {BASELINE: 0, SHARED_L3: 1}
+    ladders: List[Tuple[Mapping, int, int]] = []  # (point, pf_i, ta_i)
+    for i, point in enumerate(points):
+        pf_over, ta_over = _split_overrides(point)
+        sp_pf = apply_point(PREFETCH, pf_over)
+        sp_ta = apply_point(TENSOR_AWARE, ta_over)
+        for sp in (sp_pf, sp_ta):
+            if sp not in cfg_index:
+                cfg_index[sp] = len(cfgs)
+                cfgs.append(sp)
+        ladders.append((point, cfg_index[sp_pf], cfg_index[sp_ta]))
+
+    results = run_config_sweep(cfgs, scale=scale, engine=engine,
+                               processes=processes, native=native)
+
+    def _agg(i: int) -> Dict[str, float]:
+        return {k: v for k, v in results[i]["aggregate"].items()
+                if k != "per_workload"}
+
+    rows_out: List[Dict[str, Any]] = []
+    ta_rows: List[Dict[str, float]] = []
+    for point, pf_i, ta_i in ladders:
+        ladder = {"baseline": _agg(0), "shared_l3": _agg(1),
+                  "prefetch": _agg(pf_i), "tensor_aware": _agg(ta_i)}
+        rows_out.append({
+            "point": dict(point),
+            "label": point_label(point),
+            "rows": ladder,
+            "trend_ok": trend_ok(ladder),
+        })
+        ta_rows.append(ladder["tensor_aware"])
+
+    front = pareto_front(ta_rows, objectives)
+    for i, r in enumerate(rows_out):
+        r["pareto"] = i in front
+
+    # recommend from the Pareto front OF THE TREND-OK SUBSET: a trend-ok
+    # point dominated only by trend-failing points is still the best
+    # usable retune, and discarding it would report "no trend-restoring
+    # point" while n_trend_ok > 0
+    recommended = None
+    trend_idx = [i for i, r in enumerate(rows_out) if r["trend_ok"]]
+    if trend_idx:
+        sub = pareto_front([ta_rows[i] for i in trend_idx], objectives)
+        candidates = [trend_idx[j] for j in sub]
+        best = max(candidates,
+                   key=lambda i: (ta_rows[i]["hit_rate"],
+                                  -ta_rows[i]["latency_ns"]))
+        recommended = rows_out[best]
+    return {
+        "scale": scale,
+        "engine": engine,
+        "n_points": len(rows_out),
+        "n_unique_configs": len(cfgs),
+        "objectives": [list(o) for o in objectives],
+        "points": rows_out,
+        "pareto_front": front,
+        "n_trend_ok": sum(r["trend_ok"] for r in rows_out),
+        "recommended": recommended,
+    }

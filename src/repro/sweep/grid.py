@@ -1,0 +1,110 @@
+"""Grid enumeration and override application for design-space sweeps.
+
+A sweep *point* is a flat dict of dotted override paths into
+``SystemParams``, e.g.::
+
+    {"prefetch.degree": 1, "l3.ta.bypass_utility": 0.0, "l2.policy": "lru"}
+
+Paths resolve through nested frozen dataclasses with ``dataclasses.replace``
+so the produced ``SystemParams`` is a first-class config: hashable,
+picklable, and accepted by every engine.
+
+Two convenience namespaces are expanded before resolution:
+
+* ``ta.<knob>`` — applies the tensor-aware policy knob to *every* cache
+  level (the compiled kernel supports one knob set per system; levels
+  that run LRU simply ignore it);
+* everything else is a literal attribute path.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Any, Dict, Iterable, List, Mapping, Sequence, Tuple
+
+from repro.core.params import SystemParams
+
+#: cache levels ``ta.*`` fans out to
+_TA_LEVELS = ("l1", "l2", "l3")
+
+
+def enumerate_grid(axes: Mapping[str, Sequence[Any]]) -> List[Dict[str, Any]]:
+    """Cartesian product of ``{path: values}`` → list of point dicts.
+
+    Axis order is preserved (insertion order of ``axes``), so the points
+    come out in odometer order with the LAST axis varying fastest —
+    deterministic across runs for artifact diffing.
+    """
+    if not axes:
+        return [{}]
+    names = list(axes)
+    for name, vals in axes.items():
+        if len(vals) == 0:
+            raise ValueError(f"axis {name!r} has no values")
+        if len(set(map(repr, vals))) != len(vals):
+            raise ValueError(f"axis {name!r} has duplicate values: {vals!r}")
+    return [dict(zip(names, combo))
+            for combo in itertools.product(*(axes[n] for n in names))]
+
+
+def _replace_path(obj: Any, parts: Tuple[str, ...], value: Any) -> Any:
+    """Functional update of a nested frozen-dataclass attribute."""
+    head = parts[0]
+    if not hasattr(obj, head):
+        raise AttributeError(
+            f"{type(obj).__name__} has no field {head!r} "
+            f"(while applying override path {'.'.join(parts)!r})")
+    if len(parts) == 1:
+        return dataclasses.replace(obj, **{head: value})
+    child = getattr(obj, head)
+    if child is None:
+        raise ValueError(
+            f"cannot override {'.'.join(parts)!r}: {head!r} is None "
+            f"on {getattr(obj, 'name', type(obj).__name__)!r}")
+    return dataclasses.replace(
+        obj, **{head: _replace_path(child, parts[1:], value)})
+
+
+def _expand(point: Mapping[str, Any],
+            base: SystemParams) -> List[Tuple[str, Any]]:
+    """Expand convenience namespaces into literal attribute paths."""
+    out: List[Tuple[str, Any]] = []
+    for path, value in point.items():
+        if path.startswith("ta."):
+            knob = path[len("ta."):]
+            for lvl in _TA_LEVELS:
+                if getattr(base, lvl) is not None:
+                    out.append((f"{lvl}.ta.{knob}", value))
+        else:
+            out.append((path, value))
+    return out
+
+
+def apply_point(base: SystemParams, point: Mapping[str, Any],
+                name: str = "") -> SystemParams:
+    """Apply one sweep point's overrides to ``base``.
+
+    ``name`` (default: keep the base name) labels the resulting config in
+    Metrics rows and artifacts.
+    """
+    sp = base
+    for path, value in _expand(point, base):
+        sp = _replace_path(sp, tuple(path.split(".")), value)
+    if name:
+        sp = dataclasses.replace(sp, name=name)
+    return sp
+
+
+def point_label(point: Mapping[str, Any]) -> str:
+    """Stable human-readable label for a point (artifact keys)."""
+    if not point:
+        return "base"
+    return "|".join(f"{k}={point[k]}" for k in sorted(point))
+
+
+def grid_size(axes: Mapping[str, Sequence[Any]]) -> int:
+    n = 1
+    for vals in axes.values():
+        n *= len(vals)
+    return n

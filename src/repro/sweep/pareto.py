@@ -1,0 +1,83 @@
+"""Pareto-front extraction over simulator Metrics aggregates.
+
+The paper's four headline metrics pull in different directions (a deeper
+prefetch degree buys hit rate with DRAM energy; the L3 streaming bypass
+buys latency with hit rate), so sweep results are a multi-objective
+trade-off surface.  The front is the set of non-dominated points: nothing
+else is at least as good on every objective and strictly better on one.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Mapping, Sequence, Tuple
+
+#: (metric key, sense): +1 = maximize, -1 = minimize — the paper's four
+#: Table I-III metrics in their canonical order.
+OBJECTIVES: Tuple[Tuple[str, int], ...] = (
+    ("latency_ns", -1),
+    ("bandwidth_gbps", +1),
+    ("hit_rate", +1),
+    ("energy_uj", -1),
+)
+
+
+def _vector(row: Mapping[str, float],
+            objectives: Sequence[Tuple[str, int]]) -> Tuple[float, ...]:
+    """Maximization-oriented objective vector for one row."""
+    return tuple(sense * float(row[key]) for key, sense in objectives)
+
+
+def dominates(a: Mapping[str, float], b: Mapping[str, float],
+              objectives: Sequence[Tuple[str, int]] = OBJECTIVES) -> bool:
+    """True iff ``a`` is at least as good as ``b`` everywhere and strictly
+    better somewhere."""
+    va, vb = _vector(a, objectives), _vector(b, objectives)
+    return all(x >= y for x, y in zip(va, vb)) and va != vb
+
+
+def pareto_front(rows: Sequence[Mapping[str, float]],
+                 objectives: Sequence[Tuple[str, int]] = OBJECTIVES,
+                 ) -> List[int]:
+    """Indices of the non-dominated rows, in input order.
+
+    Duplicate objective vectors are all kept (they dominate nothing and
+    nothing dominates them), so equivalent configs stay visible in the
+    artifact.  O(n²) scan — sweep grids are hundreds of points, not
+    millions.
+    """
+    vecs = [_vector(r, objectives) for r in rows]
+    front: List[int] = []
+    for i, vi in enumerate(vecs):
+        dominated = False
+        for j, vj in enumerate(vecs):
+            if i == j:
+                continue
+            if all(x >= y for x, y in zip(vj, vi)) and vj != vi:
+                dominated = True
+                break
+        if not dominated:
+            front.append(i)
+    return front
+
+
+def crowding_order(rows: Sequence[Mapping[str, float]],
+                   objectives: Sequence[Tuple[str, int]] = OBJECTIVES,
+                   ) -> List[int]:
+    """Front indices ordered by NSGA-style crowding distance (descending):
+    spread-out representatives first, so a truncated report still shows
+    the extremes of the trade-off surface."""
+    front = pareto_front(rows, objectives)
+    if len(front) <= 2:
+        return front
+    dist = {i: 0.0 for i in front}
+    for k, (key, sense) in enumerate(objectives):
+        ordered = sorted(front, key=lambda i: float(rows[i][key]) * sense)
+        lo, hi = ordered[0], ordered[-1]
+        span = (float(rows[hi][key]) - float(rows[lo][key])) * sense
+        dist[lo] = dist[hi] = float("inf")
+        if span <= 0:
+            continue
+        for prev, cur, nxt in zip(ordered, ordered[1:], ordered[2:]):
+            dist[cur] += abs(float(rows[nxt][key]) - float(rows[prev][key])) \
+                / abs(span)
+    return sorted(front, key=lambda i: -dist[i])

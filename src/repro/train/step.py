@@ -57,8 +57,17 @@ def init_train_state(cfg: ModelConfig, rc: RunConfig, key) -> TrainState:
 
 def train_state_specs(cfg: ModelConfig, rc: RunConfig) -> TrainState:
     ps = shd.param_specs(cfg, fsdp_pod=rc.fsdp_pod)
-    opt = (adafactor_state_specs(ps) if rc.optimizer == "adafactor"
-           else opt_state_specs(ps))
+    if rc.optimizer == "adafactor":
+        # factored-ness is decided by SHAPE (adafactor_init), so specs
+        # must see the shapes too: stacked sub-128 leaves (LayerNorm
+        # scales) keep unfactored state whose specs differ from the
+        # factored guess (llama3-405b dryrun regression)
+        shapes = jax.eval_shape(
+            lambda: mdl.init_params(cfg, jax.random.PRNGKey(0),
+                                    dtype=jnp.dtype(rc.param_dtype)))
+        opt = adafactor_state_specs(ps, shapes)
+    else:
+        opt = opt_state_specs(ps)
     return TrainState(params=ps, opt=opt, err=())
 
 

@@ -85,6 +85,25 @@ def test_opt_state_specs_match(arch):
             f"{arch}/{opt}"
 
 
+def test_adafactor_specs_respect_shape_factoring():
+    """Unfactored leaves (any dim < 128) must get replicated (1,)-vc
+    specs and full-v vr specs even when the param spec has ≥2 axes —
+    the llama3-405b stacked-LayerNorm dryrun regression."""
+    pspecs = {"w": P(None, "data", "model"),   # (layers, 512, 512): factored
+              "ln": P(None, "model")}          # (layers, 1): NOT factored
+    shapes = {"w": (4, 512, 512), "ln": (4, 1)}
+    specs = adafactor_state_specs(pspecs, shapes)
+    assert specs.vr["w"] == P(None, "data")
+    assert specs.vc["w"] == P(None, "model")
+    assert specs.vr["ln"] == P(None, "model")  # full v: the param's spec
+    assert specs.vc["ln"] == P(None)           # (1,) placeholder: replicated
+    # structures stay aligned with a real init on the same shapes
+    params = {"w": jnp.zeros((4, 512, 512)), "ln": jnp.zeros((4, 1))}
+    state = adafactor_init(params, RunConfig(microbatches=1, remat="none"))
+    assert state.vr["ln"].shape == (4, 1)
+    assert state.vc["ln"].shape == (1,)
+
+
 def test_filter_spec_drops_missing_axes():
     s = shd.filter_spec(P(("pod", "data"), "model"), ("data", "model"))
     assert s == P(("data",), "model")

@@ -1,0 +1,232 @@
+"""repro.sweep: grid enumeration, Pareto extraction, driver plumbing, and
+engine equivalence on a sampled (non-default) sweep point.
+
+The equivalence case matters most: sweep points exercise knob values the
+preset suite never reaches (TA thresholds, prefetch ranks, policy mixes),
+so the object/SoA/native agreement proved by test_simulator_equiv.py for
+the four presets is re-checked here off the preset manifold.
+"""
+
+import dataclasses
+
+import pytest
+
+from repro.core import trace as trace_mod
+from repro.core.params import TensorPolicyParams
+from repro.core.presets import PREFETCH, TENSOR_AWARE
+from repro.core.simulator import HierarchySim
+from repro.sweep.grid import (apply_point, enumerate_grid, grid_size,
+                              point_label)
+from repro.sweep.pareto import crowding_order, dominates, pareto_front
+from repro.sweep import driver as sweep_driver
+
+
+# ---------------------------------------------------------------------------
+# grid
+# ---------------------------------------------------------------------------
+class TestGrid:
+    def test_enumeration_order_and_size(self):
+        axes = {"prefetch.degree": [1, 2], "l2.policy": ["lru", "ta"],
+                "ta.low_utility": [0.05]}
+        pts = enumerate_grid(axes)
+        assert len(pts) == grid_size(axes) == 4
+        # odometer order: last axis fastest, first axis slowest
+        assert pts[0] == {"prefetch.degree": 1, "l2.policy": "lru",
+                          "ta.low_utility": 0.05}
+        assert pts[1]["l2.policy"] == "ta"
+        assert [p["prefetch.degree"] for p in pts] == [1, 1, 2, 2]
+
+    def test_empty_axes(self):
+        assert enumerate_grid({}) == [{}]
+
+    def test_axis_validation(self):
+        with pytest.raises(ValueError):
+            enumerate_grid({"prefetch.degree": []})
+        with pytest.raises(ValueError):
+            enumerate_grid({"prefetch.degree": [2, 2]})
+
+    def test_apply_point_nested(self):
+        sp = apply_point(TENSOR_AWARE,
+                         {"prefetch.degree": 5,
+                          "l3.ta.low_utility": 0.2,
+                          "l2.policy": "lru"},
+                         name="pt")
+        assert sp.name == "pt"
+        assert sp.prefetch.degree == 5
+        assert sp.l3.ta.low_utility == 0.2
+        assert sp.l2.policy == "lru"
+        # untouched fields survive
+        assert sp.l3.policy == "tensor_aware"
+        assert sp.l2.size_bytes == TENSOR_AWARE.l2.size_bytes
+        # the base is not mutated (frozen dataclasses)
+        assert TENSOR_AWARE.prefetch.degree != 5
+        assert TENSOR_AWARE.l3.ta.low_utility == 0.05
+
+    def test_apply_point_ta_namespace_fans_out(self):
+        sp = apply_point(TENSOR_AWARE, {"ta.prefetch_rank": 9.0})
+        assert sp.l1.ta.prefetch_rank == 9.0
+        assert sp.l2.ta.prefetch_rank == 9.0
+        assert sp.l3.ta.prefetch_rank == 9.0
+
+    def test_apply_point_bad_path(self):
+        with pytest.raises(AttributeError):
+            apply_point(TENSOR_AWARE, {"prefetch.warp_factor": 9})
+        # l3 is None on a baseline-shaped config
+        base = dataclasses.replace(TENSOR_AWARE, l3=None)
+        with pytest.raises(ValueError):
+            apply_point(base, {"l3.policy": "lru"})
+
+    def test_point_label_stable(self):
+        a = point_label({"b": 1, "a": 2})
+        b = point_label({"a": 2, "b": 1})
+        assert a == b == "a=2|b=1"
+        assert point_label({}) == "base"
+
+    def test_knob_validation(self):
+        with pytest.raises(ValueError):
+            TensorPolicyParams(sample=0)
+        with pytest.raises(ValueError):
+            TensorPolicyParams(low_utility=0.9, high_utility=0.1)
+
+
+# ---------------------------------------------------------------------------
+# pareto
+# ---------------------------------------------------------------------------
+def _row(lat, bw, hit, en):
+    return {"latency_ns": lat, "bandwidth_gbps": bw,
+            "hit_rate": hit, "energy_uj": en}
+
+
+class TestPareto:
+    def test_front_on_synthetic_set(self):
+        rows = [
+            _row(100, 20, 0.60, 50),   # 0: dominated by 4 on all four
+            _row(90, 25, 0.70, 45),    # 1: dominated by 4 on all four
+            _row(80, 22, 0.65, 48),    # 2: front (best latency)
+            _row(95, 24, 0.69, 46),    # 3: dominated by 1 and 4
+            _row(85, 30, 0.80, 40),    # 4: front (best bw/hit/energy)
+        ]
+        assert pareto_front(rows) == [2, 4]
+
+    def test_dominance_requires_strict_gain(self):
+        a, b = _row(90, 25, 0.7, 45), _row(90, 25, 0.7, 45)
+        assert not dominates(a, b)     # equal vectors: neither dominates
+        assert dominates(_row(89, 25, 0.7, 45), b)
+        assert not dominates(_row(89, 24, 0.7, 45), b)  # trade-off
+
+    def test_duplicates_all_kept(self):
+        rows = [_row(90, 25, 0.7, 45), _row(90, 25, 0.7, 45),
+                _row(100, 20, 0.6, 50)]
+        assert pareto_front(rows) == [0, 1]
+
+    def test_single_objective_reduces_to_max(self):
+        rows = [_row(0, b, 0, 0) for b in (3, 9, 9, 1)]
+        assert pareto_front(rows, (("bandwidth_gbps", +1),)) == [1, 2]
+
+    def test_crowding_order_extremes_first(self):
+        # anti-correlated objectives: better latency costs bandwidth, so
+        # every point is non-dominated
+        rows = [_row(100 - 2 * i, 30 - i, 0.6, 50) for i in range(5)]
+        order = crowding_order(rows)
+        assert set(order) == set(range(5))
+        # boundary points (infinite crowding distance) lead
+        assert set(order[:2]) == {0, 4}
+
+
+# ---------------------------------------------------------------------------
+# driver
+# ---------------------------------------------------------------------------
+SCALE = 0.012
+
+
+class TestDriver:
+    def test_config_sweep_serial(self):
+        res = sweep_driver.run_config_sweep(
+            [PREFETCH, TENSOR_AWARE], scale=SCALE, processes=1,
+            workloads=["cnn"])
+        assert [r["name"] for r in res] == ["prefetch", "tensor_aware"]
+        for r in res:
+            agg = r["aggregate"]
+            assert 0.0 < agg["hit_rate"] <= 1.0
+            assert agg["latency_ns"] > 0
+            assert len(agg["per_workload"]) == 1
+            assert r["accesses_per_sec"]["cnn"] > 0
+
+    def test_ladder_sweep_shape_and_dedupe(self):
+        pts = [{"prefetch.degree": 2, "l2.policy": "lru"},
+               {"prefetch.degree": 2, "l2.policy": "tensor_aware"}]
+        payload = sweep_driver.run_ladder_sweep(
+            pts, scale=SCALE, processes=1)
+        assert payload["n_points"] == 2
+        # both points share the prefetch row: 2 fixed + 1 pf + 2 ta
+        assert payload["n_unique_configs"] == 5
+        for rec in payload["points"]:
+            assert set(rec["rows"]) == set(sweep_driver.LADDER)
+            assert isinstance(rec["trend_ok"], bool)
+        assert payload["pareto_front"], "front cannot be empty"
+        rec = payload["recommended"]
+        if rec is not None:
+            assert rec["trend_ok"]
+
+
+# ---------------------------------------------------------------------------
+# engine equivalence on a sampled sweep point (off the preset manifold)
+# ---------------------------------------------------------------------------
+SWEEP_POINT = {
+    "prefetch.degree": 3,
+    "prefetch.stride_confidence": 4,
+    "l2.policy": "lru",
+    "ta.low_utility": 0.2,
+    "ta.high_utility": 0.8,
+    "ta.prefetch_rank": 1.5,
+    "ta.sample": 8,
+    "ta.bypass_utility": 0.1,
+}
+
+
+@pytest.fixture(scope="module")
+def sweep_point_trace():
+    return trace_mod.WORKLOADS["transformer"](scale=SCALE)
+
+
+@pytest.fixture(scope="module")
+def sweep_point_reference(sweep_point_trace):
+    sp = apply_point(TENSOR_AWARE, SWEEP_POINT, name="sampled")
+    return HierarchySim(sp).run(sweep_point_trace)
+
+
+@pytest.mark.parametrize("native", [False, True])
+def test_soa_matches_object_on_sampled_point(sweep_point_trace,
+                                             sweep_point_reference,
+                                             native):
+    """Object vs SoA (pure-Python and compiled) on one sampled point with
+    every TA knob off its default — the sweep's license to trust the fast
+    engine anywhere in the grid."""
+    if native:
+        from repro.core import native as native_mod
+        if native_mod.get_lib() is None:
+            pytest.skip("no C compiler / kernel unavailable")
+    sp = apply_point(TENSOR_AWARE, SWEEP_POINT, name="sampled")
+    sim = HierarchySim(sp, engine="soa")
+    sim.native = native
+    got = sim.run(sweep_point_trace)
+    if native:
+        assert getattr(sim, "_native_counts", None) is not None, \
+            "sampled point unexpectedly fell off the compiled-kernel path"
+    for f in dataclasses.fields(sweep_point_reference):
+        a = getattr(sweep_point_reference, f.name)
+        b = getattr(got, f.name)
+        assert a == b, (f.name, a, b)
+
+
+def test_mixed_ta_knobs_fall_back_to_python_path(sweep_point_trace):
+    """Different TA knob sets at two TA levels exceed the kernel envelope;
+    the engine must transparently use the (equivalent) Python path."""
+    sp = apply_point(TENSOR_AWARE, {"l2.policy": "tensor_aware",
+                                    "l2.ta.low_utility": 0.3})
+    assert sp.l2.ta != sp.l3.ta
+    sim = HierarchySim(sp, engine="soa")
+    got = sim.run(sweep_point_trace)
+    assert getattr(sim, "_native_counts", None) is None
+    ref = HierarchySim(sp).run(sweep_point_trace)
+    assert got == ref
