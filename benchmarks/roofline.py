@@ -47,7 +47,7 @@ def report(mesh: str = "single") -> List[Dict]:
     print(f"\n== Roofline ({mesh}-pod mesh) ==")
     hdr = (f"{'arch':26s} {'shape':12s} {'compute_s':>10s} {'memory_s':>10s}"
            f" {'coll_s':>10s} {'dominant':>12s} {'useful':>7s} "
-           f"{'peak_GiB':>9s}")
+           f"{'peak_GiB':>9s} {'capacity':>13s}")
     print(hdr)
     rows = []
     for rec in cells:
@@ -60,12 +60,23 @@ def report(mesh: str = "single") -> List[Dict]:
         mem = rec.get("memory", {})
         peak = mem.get("peak_bytes_per_device_tpu_adjusted",
                        mem.get("peak_bytes_per_device", 0)) / 2 ** 30
+        # capacity verdict from the repro.plan pass (the peak shown is
+        # the FITTED configuration's when mitigations were applied)
+        plan = rec.get("plan")
+        if plan is None:
+            from repro.plan.capacity import BUDGET_BYTES
+            cap = ("fits" if peak <= BUDGET_BYTES / 2**30
+                   else "UNPLANNED")
+        else:
+            cap = plan["verdict"]
+            if plan["rungs"]:
+                cap += f"({len(plan['rungs'])}r)"
         print(f"{arch:26s} {shape:12s} {t['compute_s']:10.3f} "
               f"{t['memory_s']:10.3f} {t['collective_s']:10.3f} "
               f"{t['dominant']:>12s} {t['useful_flop_ratio']:7.2f} "
-              f"{peak:9.2f}")
+              f"{peak:9.2f} {cap:>13s}")
         rows.append({"arch": arch, "shape": shape, **t,
-                     "peak_gib": peak})
+                     "peak_gib": peak, "capacity": cap})
     # bottleneck census
     from collections import Counter
     census = Counter(r["dominant"] for r in rows)

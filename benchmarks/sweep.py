@@ -30,6 +30,15 @@ FULL_AXES = {
     "l2.policy": ["lru", "tensor_aware"],
     "ta.low_utility": [0.05, 0.2],
     "ta.prefetch_rank": [2.5, 3.5],
+    "ta.stream_rank": [0.0, 1.5],
+}
+
+#: focused grid for the TA-vs-prefetch hit-margin question (ROADMAP
+#: "Next"): how should STREAMING-class lines rank against dead/cold
+#: resident tensors at the shared L3?
+STREAM_RANK_AXES = {
+    "ta.stream_rank": [0.0, 0.5, 1.5, 2.0],
+    "ta.low_utility": [0.05, 0.2],
 }
 
 #: CI-sized grid: 8 ladders, still spanning every axis kind
@@ -89,12 +98,18 @@ def main() -> None:
     ap.add_argument("--no-native", action="store_true",
                     help="force the pure-Python SoA path")
     ap.add_argument("--out", default=None, help="artifact path override")
+    ap.add_argument("--grid", default=None, choices=[None, "stream_rank"],
+                    help="named focused grid (stream_rank: the TA "
+                         "streaming-line victim-rank question)")
     args = ap.parse_args()
 
-    axes = SMOKE_AXES if args.smoke else FULL_AXES
+    axes = (STREAM_RANK_AXES if args.grid == "stream_rank"
+            else SMOKE_AXES if args.smoke else FULL_AXES)
     scale = args.scale if args.scale is not None \
         else (0.02 if args.smoke else 1.0)
-    tag = "smoke" if args.smoke else f"scale{scale:g}"
+    tag = (f"{args.grid}_scale{scale:g}" if args.grid
+           else "smoke" if args.smoke
+           else f"scale{scale:g}")
     out = Path(args.out) if args.out else ARTIFACTS / f"sweep_{tag}.json"
     payload = run(scale, axes, out, engine=args.engine,
                   processes=args.processes, native=not args.no_native)

@@ -206,3 +206,20 @@ class RunConfig:
     beta2: float = 0.95
     kv_page_size: int = 256           # paged KV cache (HERMES tensor-aware)
     hbm_kv_budget_frac: float = 0.6   # fraction of KV kept in the HBM tier
+    # --- capacity-planner mitigations (repro.plan ladder) ---
+    logits_mode: str = "all"          # "last": prefill unembeds only the
+                                      # final position — the (B,S,V) logits
+                                      # tensor never materializes
+    prefill_chunks: int = 1           # scan the prefill batch in chunks of
+                                      # B/chunks (live activations shrink
+                                      # by the chunk count)
+    kv_seq_shard: bool = False        # shard the decode-cache SEQ dim over
+                                      # the model axis (decode leaves it
+                                      # idle when kv_heads < axis size)
+    fsdp_gather_in_loop: bool = False  # pin scanned weights to their FSDP
+                                      # spec inside the layer-scan body so
+                                      # the all-gather happens per layer,
+                                      # not hoisted as the full stack
+    opt_offload: bool = False         # optimizer moments in host DRAM
+                                      # (tpu/offload.OffloadedAdamW): HBM
+                                      # holds a 2-leaf streaming window

@@ -443,19 +443,20 @@ typedef struct {
     Fifo *shadow;
     /* tensor-aware policy knobs (params.TensorPolicyParams) */
     int64_t ta_sample, ta_shadow, ta_decay;
-    double ta_low, ta_high, ta_pref;
+    double ta_low, ta_high, ta_pref, ta_stream;
 } Cache;
 
 static void cache_init(Cache *c, int64_t S, int64_t A, int64_t inst,
                        int ta_on, int64_t nten,
                        int64_t ta_sample, int64_t ta_shadow,
                        int64_t ta_decay, double ta_low, double ta_high,
-                       double ta_pref) {
+                       double ta_pref, double ta_stream) {
     memset(c, 0, sizeof(*c));
     c->S = S; c->A = A; c->inst = inst; c->ta_on = ta_on; c->nten = nten;
     c->ta_sample = ta_sample; c->ta_shadow = ta_shadow;
     c->ta_decay = ta_decay;
     c->ta_low = ta_low; c->ta_high = ta_high; c->ta_pref = ta_pref;
+    c->ta_stream = ta_stream;
     int64_t sb = 0;
     while ((1LL << sb) < S) sb++;
     c->sbits = sb;
@@ -590,7 +591,7 @@ static int c_insert(Cache *c, int64_t si, int64_t s, int64_t tag,
                     int64_t sl = base + w;
                     double b;
                     if (c->pref[sl]) b = c->ta_pref;
-                    else if (c->reu[sl] == 0) b = 0.0;
+                    else if (c->reu[sl] == 0) b = c->ta_stream;
                     else b = bucket[c->ten[sl]];
                     double lt = c->last[sl];
                     if (first || b < vb
@@ -955,7 +956,7 @@ enum { CI_NREQ, CI_NCORES, CI_S1, CI_A1, CI_S2, CI_A2, CI_S3, CI_A3,
 enum { CD_ML_THRESH, CD_HP_MIGCOST, CD_D_BL, CD_D_RHL, CD_D_BW, CD_D_GAP,
        CD_D_RBB, CD_H_BL, CD_H_RHL, CD_H_BW, CD_H_GAP, CD_H_RBB,
        CD_CORE_MLP, CD_ACCEL_MLP, CD_C2C, CD_INV, CD_PF_THROTTLE,
-       CD_TA_LOW, CD_TA_HIGH, CD_TA_PREF, CD_TA_BYPASS,
+       CD_TA_LOW, CD_TA_HIGH, CD_TA_PREF, CD_TA_BYPASS, CD_TA_STREAM,
        CD_COUNT };
 
 void run_trace(const int64_t *ci, const double *cd,
@@ -972,15 +973,15 @@ void run_trace(const int64_t *ci, const double *cd,
     int64_t tas = ci[CI_TA_SAMPLE], tash = ci[CI_TA_SHADOW],
             tad = ci[CI_TA_DECAY];
     double tal = cd[CD_TA_LOW], tah = cd[CD_TA_HIGH],
-           tap = cd[CD_TA_PREF];
+           tap = cd[CD_TA_PREF], tast = cd[CD_TA_STREAM];
     cache_init(&S->l1, ci[CI_S1], ci[CI_A1], S->n_req, ci[CI_TA1], nten,
-               tas, tash, tad, tal, tah, tap);
+               tas, tash, tad, tal, tah, tap, tast);
     cache_init(&S->l2, ci[CI_S2], ci[CI_A2], S->n_req, ci[CI_TA2], nten,
-               tas, tash, tad, tal, tah, tap);
+               tas, tash, tad, tal, tah, tap, tast);
     S->has_l3 = ci[CI_HASL3];
     if (S->has_l3)
         cache_init(&S->l3, ci[CI_S3], ci[CI_A3], 1, ci[CI_TA3], nten,
-                   tas, tash, tad, tal, tah, tap);
+                   tas, tash, tad, tal, tah, tap, tast);
     S->ta_bypass = cd[CD_TA_BYPASS];
     S->mesi = ci[CI_MESI];
     S->pf_on = ci[CI_PFON];

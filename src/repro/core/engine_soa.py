@@ -223,6 +223,7 @@ def _make_insert(C: _CacheState, track_pf: bool = False):
     sb = C.set_bits
     lru = ta is None
     pref_rank = C.params.ta.prefetch_rank
+    stream_rank = C.params.ta.stream_rank
 
     seq = C.seq
     fast_lru = lru and C.private
@@ -275,7 +276,7 @@ def _make_insert(C: _CacheState, track_pf: bool = False):
                     if pref_l[sl]:
                         b = pref_rank
                     elif reuse_l[sl] == 0:  # REUSE_STREAMING
-                        b = 0.0
+                        b = stream_rank
                     else:
                         b = bucket.get(tens[sl], 3.0)
                     lt = last[sl]

@@ -35,8 +35,8 @@ _BUILD = Path(__file__).resolve().parent / "_build"
 (CD_ML_THRESH, CD_HP_MIGCOST, CD_D_BL, CD_D_RHL, CD_D_BW, CD_D_GAP,
  CD_D_RBB, CD_H_BL, CD_H_RHL, CD_H_BW, CD_H_GAP, CD_H_RBB,
  CD_CORE_MLP, CD_ACCEL_MLP, CD_C2C, CD_INV, CD_PF_THROTTLE,
- CD_TA_LOW, CD_TA_HIGH, CD_TA_PREF, CD_TA_BYPASS,
- CD_COUNT) = range(22)
+ CD_TA_LOW, CD_TA_HIGH, CD_TA_PREF, CD_TA_BYPASS, CD_TA_STREAM,
+ CD_COUNT) = range(23)
 
 _lib = None
 _lib_tried = False
@@ -180,6 +180,7 @@ def run_native(sim, trace: Dict) -> bool:
     cd[CD_TA_LOW] = tp.low_utility
     cd[CD_TA_HIGH] = tp.high_utility
     cd[CD_TA_PREF] = tp.prefetch_rank
+    cd[CD_TA_STREAM] = tp.stream_rank
     cd[CD_TA_BYPASS] = (sp.l3.ta.bypass_utility
                         if sp.l3 is not None else 0.0)
 

@@ -42,6 +42,11 @@ class TensorPolicyParams:
     high_utility: float = 0.5   # above: "hot" bucket, protected
     prefetch_rank: float = 2.5  # victim rank of unused prefetched lines
     bypass_utility: float = 0.05  # L3 fill bypass for dead streaming tensors
+    stream_rank: float = 0.0    # victim rank of STREAMING-class lines:
+                                # 0.0 sheds them before everything (the
+                                # original hard-wired order); raising it
+                                # above 1.0 protects a recently-touched
+                                # stream over dead resident tensors
 
     def __post_init__(self) -> None:
         if self.sample < 1 or self.shadow_max < 1 or self.decay_fills < 1:

@@ -129,7 +129,7 @@ class TensorAwarePolicy(ReplacementPolicy):
                 # hit rate to LRU's recency ordering)
                 rank = (tp.prefetch_rank, line.last_touch)
             elif line.reuse_class == REUSE_STREAMING:
-                rank = (0.0, line.last_touch)
+                rank = (tp.stream_rank, line.last_touch)
             else:
                 u = self.utility(line.tensor_id)
                 bucket = (1.0 if u < tp.low_utility

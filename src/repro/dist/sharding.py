@@ -119,12 +119,55 @@ def _path_name(key) -> str:
     return str(key)
 
 
-def cache_specs(cfg: ModelConfig, batch: int, mesh) -> Any:
+def cache_batch_pos(name: str, nd: int, ssm_version: int) -> Optional[int]:
+    """Batch-dim index of one cache leaf, by leaf name (None = no batch
+    dim the planner/sharder should touch).  Shared between
+    :func:`cache_specs` and the chunked-prefill scan (serve/steps.py),
+    which slices/updates the cache along exactly this axis."""
+    if name in ("k", "v"):                   # (..., B, S|nit, n_kv, hd)
+        return nd - 4
+    if name == "length":                     # (..., B)
+        return nd - 1
+    if name == "conv":                       # (..., B, W-1, C)
+        return nd - 3
+    if name == "state":     # v1 (..., B, d, N) | v2 (..., B, H, N, P)
+        return nd - 3 if ssm_version == 1 else nd - 4
+    return None
+
+
+def cache_batch_positions(cfg: ModelConfig, cache_tree: Any) -> Any:
+    """Tree of batch-dim indices mirroring ``cache_tree`` (leaves with no
+    batch axis map to -1)."""
+    ver = cfg.ssm_version
+
+    def pos(path, leaf):
+        p = cache_batch_pos(_path_name(path[-1]), len(leaf.shape), ver)
+        return -1 if p is None else p
+
+    return jax.tree_util.tree_map_with_path(pos, cache_tree)
+
+
+def cache_specs(cfg: ModelConfig, batch: int, mesh,
+                seq_shard: bool = False) -> Any:
     """PartitionSpec tree mirroring ``model.init_cache(cfg, batch, ...)``.
 
     Batch dims shard over the mesh's data axes (when the global batch
     divides them); KV head dims shard over ``model`` when divisible.
     Works with any mesh-like object exposing ``axis_names``/``shape``.
+
+    The KV SEQ dim picks up whatever axes the other dims could not use
+    (the capacity fixes behind the repro.plan ladder):
+
+    * when the batch cannot absorb the data axes (e.g. the B=1
+      ``long_500k`` cell), they move to the seq dim — otherwise the
+      cache replicates across the whole data extent and GSPMD is free
+      to gather it per scan step (the zamba2 140 GiB-on-both-meshes
+      regression);
+    * with ``seq_shard`` (``RunConfig.kv_seq_shard``), the ``model``
+      axis lands on seq when the KV-heads dim could not take it —
+      decode cells with kv_heads < axis size otherwise leave the model
+      axis idle, so the single-pod cache only shrinks by the data
+      extent (llama3-405b decode: 126 GiB/device).
     """
     from repro.models import model as mdl
     shapes = jax.eval_shape(
@@ -136,27 +179,33 @@ def cache_specs(cfg: ModelConfig, batch: int, mesh) -> Any:
     prod = 1
     for a in baxes:
         prod *= sizes.get(a, 1)
-    batch_entry = baxes if (baxes and batch % max(1, prod) == 0) else None
+    batch_sharded = bool(baxes) and batch % max(1, prod) == 0
+    batch_entry = baxes if batch_sharded else None
     model_size = sizes.get(MODEL, 1)
     ver = cfg.ssm_version
+    # NOTE: init_cache above is evaluated at max_seq=8, so seq-dim
+    # divisibility must be checked against the REAL seq length by the
+    # caller; production seq lengths (32768 / 524288) divide every
+    # production axis product, and the tiny seqs in unit tests simply
+    # fall back to unsharded.  We check against the placeholder shape
+    # only to skip degenerate leaves.
 
     def spec_for(path, leaf):
         nd = len(leaf.shape)
         name = _path_name(path[-1])
         dims = [None] * nd
-        if name in ("k", "v"):               # (..., B, S|nit, n_kv, hd)
-            bpos = nd - 4
+        bpos = cache_batch_pos(name, nd, ver)
+        if name in ("k", "v"):
             if (MODEL in axes and leaf.shape[-2] % model_size == 0
                     and leaf.shape[-2] >= model_size):
                 dims[-2] = MODEL             # shard KV heads
-        elif name == "length":               # (..., B)
-            bpos = nd - 1
-        elif name == "conv":                 # (..., B, W-1, C)
-            bpos = nd - 3
-        elif name == "state":                # v1 (..., B, d, N) | v2 (..., B, H, N, P)
-            bpos = nd - 3 if ver == 1 else nd - 4
-        else:
-            bpos = None
+            seq_axes = []
+            if not batch_sharded and baxes:
+                seq_axes.extend(baxes)       # data axes idle → to seq
+            if seq_shard and MODEL in axes and dims[-2] is None:
+                seq_axes.append(MODEL)       # model axis idle → to seq
+            if seq_axes:
+                dims[nd - 3] = tuple(seq_axes)
         if bpos is not None and bpos >= 0 and batch_entry is not None:
             dims[bpos] = batch_entry
         return P(*dims)

@@ -27,9 +27,18 @@ For each cell this lowers the appropriate step function —
 Results are cached as JSON under artifacts/dryrun/ (one file per cell) —
 benchmarks/roofline.py and EXPERIMENTS.md §Dry-run read from there.
 
+``--plan`` runs the repro.plan capacity pass (``plan_cell_pass``
+below): every cell whose TPU-adjusted peak exceeds the 16 GiB/device
+budget climbs the mitigation ladder (mitigate.rungs_for) with a
+measured re-lower per rung — regressions are reverted — and its
+artifact regenerated with a ``plan`` section (rungs, before/after
+bytes, verdict), and artifacts/plan/ gets the verdict table.  Cells
+that still cannot fit carry an explicit hard-floor explanation.
+
 Usage:
     python -m repro.launch.dryrun --arch llama3-405b --shape train_4k
     python -m repro.launch.dryrun --all [--mesh single|multi|both]
+    python -m repro.launch.dryrun --all --plan
 """
 
 import argparse
@@ -172,6 +181,20 @@ def _cost_dict(compiled) -> Dict[str, float]:
 # ---------------------------------------------------------------------------
 # cell lowering
 # ---------------------------------------------------------------------------
+def _clamp_micro(rc: RunConfig, sc, mesh) -> RunConfig:
+    """Keep ≥1 sequence per batch shard per microbatch — padding
+    otherwise silently halves the useful-FLOP ratio."""
+    shards = 1
+    for a in ("pod", "data"):
+        if a in mesh.axis_names:
+            shards *= mesh.shape[a]
+    micro = max(1, min(rc.microbatches, sc.global_batch // shards))
+    if micro != rc.microbatches:
+        import dataclasses as _dc
+        rc = _dc.replace(rc, microbatches=micro)
+    return rc
+
+
 def lower_cell(arch: str, shape_name: str, mesh,
                rc: Optional[RunConfig] = None):
     """Build + lower the step for one cell.  Returns (lowered, meta)."""
@@ -182,19 +205,10 @@ def lower_cell(arch: str, shape_name: str, mesh,
         raise ValueError(f"unsupported cell: {why}")
     if rc is None:
         rc = get_run_config(arch, shape_name)
-        if sc.kind == "train":
-            # keep ≥1 sequence per batch shard per microbatch — padding
-            # otherwise silently halves the useful-FLOP ratio
-            shards = 1
-            for a in ("pod", "data"):
-                if a in mesh.axis_names:
-                    shards *= mesh.shape[a]
-            micro = max(1, min(rc.microbatches, sc.global_batch // shards))
-            if micro != rc.microbatches:
-                import dataclasses as _dc
-                rc = _dc.replace(rc, microbatches=micro)
+    if sc.kind == "train":
+        rc = _clamp_micro(rc, sc, mesh)
 
-    pspecs = shd.param_specs(cfg)
+    pspecs = shd.param_specs(cfg, fsdp_pod=rc.fsdp_pod)
     specs = input_specs(cfg, sc)
 
     if sc.kind == "train":
@@ -211,8 +225,9 @@ def lower_cell(arch: str, shape_name: str, mesh,
     elif sc.kind == "prefill":
         step = build_prefill_step(cfg, rc, max_seq=sc.seq_len)
         params_sh = shd.named(pspecs, mesh)
-        cache_sh = shd.named(shd.cache_specs(cfg, sc.global_batch, mesh),
-                             mesh)
+        cache_sh = shd.named(
+            shd.cache_specs(cfg, sc.global_batch, mesh,
+                            seq_shard=rc.kv_seq_shard), mesh)
         n_tok_extra = 2 if cfg.family == "audio" else 1
         tok_sh = shd.named(
             shd.io_batch_spec(sc.global_batch, mesh, n_tok_extra), mesh)
@@ -237,8 +252,9 @@ def lower_cell(arch: str, shape_name: str, mesh,
     else:  # decode
         step = build_decode_step(cfg, rc)
         params_sh = shd.named(pspecs, mesh)
-        cache_sh = shd.named(shd.cache_specs(cfg, sc.global_batch, mesh),
-                             mesh)
+        cache_sh = shd.named(
+            shd.cache_specs(cfg, sc.global_batch, mesh,
+                            seq_shard=rc.kv_seq_shard), mesh)
         n_tok_extra = 2 if cfg.family == "audio" else 1
         tok_sh = shd.named(
             shd.io_batch_spec(sc.global_batch, mesh, n_tok_extra), mesh)
@@ -269,7 +285,9 @@ def lower_cell(arch: str, shape_name: str, mesh,
 
 
 def run_cell(arch: str, shape_name: str, multi_pod: bool,
-             save: bool = True, verbose: bool = True) -> Dict[str, Any]:
+             save: bool = True, verbose: bool = True,
+             rc_overrides: Optional[Dict[str, Any]] = None
+             ) -> Dict[str, Any]:
     mesh_name = "multi" if multi_pod else "single"
     out_path = ARTIFACTS / f"{arch}__{shape_name}__{mesh_name}.json"
     cfg = ARCHS[arch]
@@ -283,6 +301,8 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
             out_path.write_text(json.dumps(rec, indent=1))
         return rec
 
+    rc = (get_run_config(arch, shape_name, **rc_overrides)
+          if rc_overrides else None)
     mesh = make_production_mesh(multi_pod=multi_pod)
     t0 = time.time()
     try:
@@ -290,7 +310,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
         # jax >= 0.5 has set_mesh; 0.4.x uses the Mesh context manager
         set_mesh = getattr(jax.sharding, "set_mesh", None)
         with (set_mesh(mesh) if set_mesh is not None else mesh):
-            lowered, meta = lower_cell(arch, shape_name, mesh)
+            lowered, meta = lower_cell(arch, shape_name, mesh, rc=rc)
             t_lower = time.time() - t0
             compiled = lowered.compile()
             t_compile = time.time() - t0 - t_lower
@@ -322,6 +342,8 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
                "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
                "memory": mem, "cost": cost, "collectives": coll,
                "hlo": hlo, "roofline": terms}
+        if rc_overrides:
+            rec["rc_overrides"] = dict(rc_overrides)
     except Exception as e:
         rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
                "status": "error", "error": f"{type(e).__name__}: {e}",
@@ -353,6 +375,155 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
     return rec
 
 
+# ---------------------------------------------------------------------------
+# capacity pass (repro.plan)
+# ---------------------------------------------------------------------------
+def _adjusted_peak(rec: Dict[str, Any]) -> int:
+    mem = rec.get("memory", {})
+    return int(mem.get("peak_bytes_per_device_tpu_adjusted",
+                       mem.get("peak_bytes_per_device", 0)))
+
+
+def _save_rec(rec: Dict[str, Any], arch: str, shape: str,
+              mesh_name: str) -> None:
+    out_path = ARTIFACTS / f"{arch}__{shape}__{mesh_name}.json"
+    out_path.parent.mkdir(parents=True, exist_ok=True)
+    slim = {k: v for k, v in rec.items() if k != "trace"}
+    out_path.write_text(json.dumps(slim, indent=1))
+
+
+def plan_cell_pass(arch: str, shape: str, multi_pod: bool,
+                   budget: Optional[int] = None,
+                   save: bool = True) -> Dict[str, Any]:
+    """Capacity pass for one cell: climb the ladder rung by rung.
+
+    Each applicable ``relower`` rung is tried ON TOP of the accepted
+    stack and re-measured; a rung that regresses the peak is reverted
+    (rung interactions are real: a chunked prefill writing into a
+    seq-sharded cache reshards every chunk).  The climb stops at the
+    first fitting configuration; ``analytic`` tier-move rungs (host
+    offload) apply to whatever peak is left.  The regenerated artifact
+    carries the full ``plan`` section.
+    """
+    from repro.plan.capacity import BUDGET_BYTES, cell_breakdown
+    from repro.plan.mitigate import (analytic_savings,
+                                     hard_floor_explanation,
+                                     rung_applies, rungs_for)
+
+    budget = BUDGET_BYTES if budget is None else budget
+    mesh_name = "multi" if multi_pod else "single"
+    path = ARTIFACTS / f"{arch}__{shape}__{mesh_name}.json"
+    rec = json.loads(path.read_text()) if path.exists() else None
+    fresh = rec is None or rec.get("status") == "error"
+    if fresh:
+        rec = run_cell(arch, shape, multi_pod, save=save)
+    if rec.get("status") != "ok":
+        return rec
+    # the BEFORE peak is the unmitigated baseline: on a re-planned
+    # artifact it lives in the existing plan section
+    before = int(rec.get("plan", {}).get("before_peak_bytes",
+                                         _adjusted_peak(rec)))
+    if before <= budget:
+        return rec          # fits as-is; report marks it fits_asis
+
+    kind = SHAPES[shape].kind
+    best_rec, best_peak = rec, before
+    overrides: Dict[str, Any] = {}
+    rungs_applied = []
+    errors = []
+    relower_rungs = [r for r in rungs_for(kind) if r.kind == "relower"]
+    analytic_rungs = [r for r in rungs_for(kind) if r.kind == "analytic"]
+
+    # spec-level defaults (e.g. the cache seq-dim fallback in
+    # dist/sharding.py) land on a bare re-lower even when no RunConfig
+    # rung applies — take that as the ladder's ground state.  A freshly
+    # computed rec IS that ground state (skip the duplicate compile).
+    measured = fresh
+    if not fresh:
+        ground = run_cell(arch, shape, multi_pod, save=False,
+                          verbose=False)
+        if ground.get("status") == "ok":
+            measured = True
+            if _adjusted_peak(ground) < best_peak:
+                best_rec, best_peak = ground, _adjusted_peak(ground)
+
+    for rung in relower_rungs:
+        if best_peak <= budget:
+            break
+        ov = rung_applies(rung, arch, shape, mesh_name, overrides)
+        if ov is None:
+            continue
+        trial = dict(overrides, **ov)
+        cand = run_cell(arch, shape, multi_pod, save=False, verbose=False,
+                        rc_overrides=trial)
+        if cand.get("status") != "ok":
+            errors.append({"rung": rung.name,
+                           "error": cand.get("error", "relower failed")})
+            continue
+        measured = True
+        peak = _adjusted_peak(cand)
+        if peak < best_peak:
+            best_rec, best_peak = cand, peak
+            overrides = trial
+            rungs_applied.append(rung.name)
+
+    if not measured:
+        # every lowering failed this run: leave the stored artifact (and
+        # any prior plan verdict) untouched rather than writing a plan
+        # built from zero fresh measurements
+        print(f"[plan] {arch} × {shape} × {mesh_name}: all ladder "
+              f"lowerings failed; artifact left unchanged")
+        return rec
+
+    rc = get_run_config(arch, shape, **overrides)
+    analytic = []
+    if best_peak > budget:
+        for rung in analytic_rungs:
+            if rung_applies(rung, arch, shape, mesh_name, overrides) is None:
+                continue
+            saving, note = analytic_savings(rung, arch, shape, mesh_name,
+                                            rc)
+            if saving > 0:
+                analytic.append({"rung": rung.name,
+                                 "saving_bytes": int(saving),
+                                 "note": note})
+                rungs_applied.append(rung.name)
+
+    moved = sum(a["saving_bytes"] for a in analytic)
+    projected = max(0, best_peak - moved)
+    if best_peak <= budget:
+        verdict = "fits"
+    elif projected <= budget:
+        verdict = "fits_offload"
+    else:
+        verdict = "hard_floor"
+    bd = cell_breakdown(arch, shape, mesh_name, rc=rc,
+                        measured_peak=best_peak)
+    plan = {"budget_bytes": budget,
+            "before_peak_bytes": before,
+            "after_peak_bytes": best_peak,
+            "projected_peak_bytes": projected,
+            "rungs": rungs_applied,
+            "rc_overrides": overrides,
+            "analytic": analytic,
+            "breakdown": bd.as_dict(),
+            "verdict": verdict}
+    if errors:
+        plan["rung_errors"] = errors
+    if verdict == "hard_floor":
+        plan["explanation"] = hard_floor_explanation(
+            bd, best_peak, moved, budget=budget)
+    best_rec = dict(best_rec)
+    best_rec["plan"] = plan
+    if save:
+        _save_rec(best_rec, arch, shape, mesh_name)
+    print(f"[plan] {arch} × {shape} × {mesh_name}: "
+          f"{before / 2**30:.1f} → {best_peak / 2**30:.1f} GiB "
+          f"(projected {projected / 2**30:.1f}) — {verdict} "
+          f"[{', '.join(rungs_applied) or 'no rungs'}]")
+    return best_rec
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default=None, choices=ARCH_IDS + [None])
@@ -362,6 +533,10 @@ def main() -> None:
     ap.add_argument("--all", action="store_true")
     ap.add_argument("--force", action="store_true",
                     help="recompute cells that already have artifacts")
+    ap.add_argument("--plan", action="store_true",
+                    help="capacity pass: re-lower over-budget cells with "
+                         "the repro.plan mitigation ladder and write the "
+                         "verdict table to artifacts/plan/")
     args = ap.parse_args()
 
     archs = [args.arch] if args.arch else ARCH_IDS
@@ -370,6 +545,19 @@ def main() -> None:
               "both": [False, True]}[args.mesh]
     if not args.all and not args.arch:
         ap.error("pass --all or --arch")
+
+    if args.plan:
+        n_err = 0
+        for arch in archs:
+            for shape in shapes:
+                for multi in meshes:
+                    rec = plan_cell_pass(arch, shape, multi)
+                    n_err += rec.get("status") == "error"
+        from repro.plan.report import write_report
+        payload = write_report()
+        if n_err or payload["over_budget_unexplained"]:
+            raise SystemExit(1)
+        return
 
     n_ok = n_skip = n_err = 0
     for arch in archs:

@@ -311,8 +311,16 @@ def cpu_artifact_bytes(comps: Dict[str, "Computation"]) -> int:
     """
     entry = comps.get("__entry__")
     total = 0
+    #: ops that merely re-materialize their operand — a convert fed
+    #: through them is still a float-normalized parameter copy (the
+    #: FSDP'd weight stacks reach their convert via all-gather/copy)
+    passthrough = {"copy", "reshape", "bitcast", "transpose", "all-gather"}
     for comp in ([entry] if entry is not None else []):
-        param_names = {i.name for i in comp.instrs if i.op == "parameter"}
+        rooted = {i.name for i in comp.instrs if i.op == "parameter"}
+        for ins in comp.instrs:
+            ops = _OPERAND_RE.findall(ins.line.split("(", 1)[1])
+            if ins.op in passthrough and ops and ops[0] in rooted:
+                rooted.add(ins.name)
         for ins in comp.instrs:
             if not ins.type_str.startswith("f32"):
                 continue
@@ -320,7 +328,7 @@ def cpu_artifact_bytes(comps: Dict[str, "Computation"]) -> int:
             if nb < (16 << 20):
                 continue
             ops = _OPERAND_RE.findall(ins.line.split("(", 1)[1])
-            if not ops or ops[0] not in param_names:
+            if not ops or ops[0] not in rooted:
                 continue
             if ins.op == "convert":
                 total += nb
@@ -330,6 +338,21 @@ def cpu_artifact_bytes(comps: Dict[str, "Computation"]) -> int:
                     if (sub and sum(i.op not in ("parameter",)
                                     for i in sub.instrs) == 1
                             and any(i.op == "convert" for i in sub.instrs)):
+                        total += nb
+                        break
+            elif ins.op == "call":
+                # XLA:CPU wraps big converts in parallel_convert call
+                # computations (thread-sliced): a call whose callee does
+                # nothing but convert/reassemble is still a
+                # float-normalization copy of its parameter operand
+                reassemble = {"parameter", "convert", "tuple",
+                              "get-tuple-element", "bitcast", "reshape",
+                              "copy", "slice", "concatenate"}
+                for kind, callee in _callees(ins.line):
+                    sub = comps.get(callee)
+                    if (sub and any(i.op == "convert" for i in sub.instrs)
+                            and all(i.op in reassemble
+                                    for i in sub.instrs)):
                         total += nb
                         break
     return total

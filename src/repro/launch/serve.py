@@ -27,13 +27,22 @@ def main() -> None:
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--page-size", type=int, default=None,
+                    help="KV page tokens (default: RunConfig.kv_page_size "
+                         "clamped to the context)")
+    ap.add_argument("--hbm-frac", type=float, default=None,
+                    help="fraction of KV pages resident in the HBM tier "
+                         "(default: RunConfig.hbm_kv_budget_frac); the "
+                         "rest demotes to the host-DRAM pool")
     args = ap.parse_args()
 
     cfg = get_config(args.arch, smoke=True)
     rc = RunConfig(remat="none")
     params = mdl.init_params(cfg, jax.random.PRNGKey(args.seed))
     engine = ServingEngine(cfg, rc, params, batch_slots=args.slots,
-                           max_seq=args.prompt_len + args.max_new + 8)
+                           max_seq=args.prompt_len + args.max_new + 8,
+                           page_size=args.page_size,
+                           hbm_frac=args.hbm_frac)
     rng = np.random.default_rng(args.seed)
     for rid in range(args.requests):
         shape = ((args.prompt_len, cfg.n_codebooks)
@@ -44,8 +53,13 @@ def main() -> None:
     for req in done:
         print(f"[serve] req {req.req_id}: {len(req.out_tokens)} tokens "
               f"{req.out_tokens[:8]}...")
+    pg = engine.pages
     print(f"[serve] {len(done)}/{args.requests} done in {engine.steps} "
-          f"engine steps; page stats: {engine.pages.stats}")
+          f"engine steps; page stats: {pg.stats}")
+    print(f"[serve] KV tiers: HBM {pg.hbm.n_pages - pg.hbm.n_free}/"
+          f"{pg.hbm.n_pages} pages in use, host "
+          f"{pg.host.n_pages - pg.host.n_free}/{pg.host.n_pages} — "
+          f"page size {pg.page_size} tokens")
 
 
 if __name__ == "__main__":

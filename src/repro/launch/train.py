@@ -8,6 +8,12 @@ trainer loop (train/loop.py) handles checkpoints/preemption/stragglers.
 On this CPU container it trains the smoke-sized config end-to-end (the
 quickstart example), or — with ``--dryrun`` — delegates to
 launch/dryrun.py for the production mesh without hardware.
+
+``--offload-optimizer`` trains with ``tpu/offload.OffloadedAdamW``
+(the repro.plan ``opt_offload`` ladder rung): AdamW moments live in
+host DRAM and stream through the device leaf-by-leaf with double
+buffering, so the on-device optimizer working set is two leaves
+instead of 2×params.  The run reports both tiers' byte counts.
 """
 
 from __future__ import annotations
@@ -20,6 +26,50 @@ from repro.configs.base import RunConfig
 from repro.configs.registry import ARCH_IDS, get_config, get_run_config
 from repro.runtime.fault import PreemptionHandler
 from repro.train.loop import train
+
+
+def train_offloaded(cfg, rc: RunConfig, *, batch: int, seq: int,
+                    steps: int, seed: int = 0):
+    """Grad step jitted on device; optimizer state streamed from host.
+
+    Returns (losses, optimizer) — the optimizer exposes ``host_bytes``
+    (capacity tier) and ``hbm_resident_bytes`` (bandwidth-tier peak of
+    the streaming double buffer).
+    """
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.models import model as mdl
+    from repro.tpu.offload import OffloadedAdamW
+    from repro.train.step import _xent
+
+    key = jax.random.PRNGKey(seed)
+    params = mdl.init_params(cfg, key)
+    opt = OffloadedAdamW(params, rc)
+    cdt = jnp.dtype(rc.compute_dtype)
+
+    def loss_fn(p, tokens, labels, img):
+        pc = jax.tree.map(
+            lambda a: a.astype(cdt)
+            if jnp.issubdtype(a.dtype, jnp.floating) else a, p)
+        logits, _, _ = mdl.forward(pc, cfg, rc, tokens, img_embed=img)
+        return _xent(logits, labels)
+
+    grad_fn = jax.jit(jax.value_and_grad(loss_fn))
+    rng = np.random.default_rng(seed)
+    losses = []
+    for _ in range(steps):
+        shape = ((batch, seq, cfg.n_codebooks) if cfg.family == "audio"
+                 else (batch, seq))
+        toks = rng.integers(0, cfg.vocab_size, size=shape).astype("int32")
+        labels = np.roll(toks, -1, axis=1)
+        img = (jnp.zeros((batch, cfg.n_img_tokens, cfg.d_model), cdt)
+               if cfg.family == "vlm" else None)
+        loss, grads = grad_fn(params, jnp.asarray(toks),
+                              jnp.asarray(labels), img)
+        params, gnorm = opt.update(params, grads)
+        losses.append(float(loss))
+    return losses, opt
 
 
 def main() -> None:
@@ -36,13 +86,26 @@ def main() -> None:
     ap.add_argument("--lr", type=float, default=3e-3)
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--offload-optimizer", action="store_true",
+                    help="AdamW moments in host DRAM via "
+                         "tpu/offload.OffloadedAdamW (capacity tier)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch, smoke=args.smoke)
     rc = RunConfig(microbatches=args.microbatches, learning_rate=args.lr,
-                   remat="none" if args.smoke else "full")
+                   remat="none" if args.smoke else "full",
+                   opt_offload=args.offload_optimizer)
     print(f"[launch] arch={cfg.name} params={cfg.param_count():,} "
           f"devices={jax.device_count()}")
+    if args.offload_optimizer:
+        losses, opt = train_offloaded(cfg, rc, batch=args.batch,
+                                      seq=args.seq, steps=args.steps,
+                                      seed=args.seed)
+        print(f"[launch] offloaded-AdamW: loss {losses[0]:.4f} → "
+              f"{losses[-1]:.4f} | host-DRAM moments "
+              f"{opt.host_bytes / 2**20:.1f} MiB | peak HBM double "
+              f"buffer {opt.hbm_resident_bytes / 2**20:.2f} MiB")
+        return
     preempt = PreemptionHandler(install=True)
     res = train(cfg, rc, batch=args.batch, seq=args.seq, steps=args.steps,
                 ckpt_dir=args.ckpt_dir, seed=args.seed, preempt=preempt)

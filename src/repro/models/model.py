@@ -291,6 +291,49 @@ def _opt_barrier_jvp(primals, tangents):
     return _opt_barrier(x), t
 
 
+def _pin_scanned_params(p, specs, mesh_axes):
+    """Constrain each per-layer weight slice to its sharded spec inside
+    the scan body (``rc.fsdp_gather_in_loop``).
+
+    Without this, GSPMD is free to all-gather the FSDP dim of the WHOLE
+    loop-invariant weight stack outside the scan — measured on
+    llama3-405b train: a 12.8 GiB bf16[126,3328,16384] gathered stack
+    (plus its 25.6 GiB f32 float-normalization twin) resident for the
+    entire step.  Pinning the sliced leaf to the sharded layout makes
+    the gather happen between the pin and the matmul — per layer,
+    inside the loop, transient — which is the textbook FSDP schedule.
+
+    Specs are matched by TRAILING dims (leading scan/stack axes are
+    never sharded), so the same spec tree serves both the per-layer
+    slices and the hybrid family's (per, ...) sub-stacks.
+    """
+    from jax.sharding import PartitionSpec as P
+    from repro.dist.sharding import filter_spec
+    leaves, td = jax.tree.flatten(p)
+    spec_leaves = jax.tree.leaves(specs,
+                                  is_leaf=lambda x: isinstance(x, P))
+    out = []
+    for a, s in zip(leaves, spec_leaves):
+        entries = tuple(s)[len(s) - a.ndim:] if len(s) >= a.ndim else ()
+        fs = filter_spec(P(*entries), mesh_axes) if entries else P()
+        if any(e is not None for e in fs):
+            a = jax.lax.with_sharding_constraint(a, fs)
+        out.append(a)
+    return jax.tree.unflatten(td, out)
+
+
+def _maybe_pin(p, cfg: ModelConfig, rc: RunConfig, key: str = "blocks"):
+    """Apply _pin_scanned_params when enabled and a mesh is ambient."""
+    if not rc.fsdp_gather_in_loop:
+        return p
+    mesh = L.ambient_mesh()
+    if mesh is None:
+        return p
+    from repro.dist import sharding as shd
+    specs = shd.param_specs(cfg, fsdp_pod=rc.fsdp_pod)[key]
+    return _pin_scanned_params(p, specs, tuple(mesh.axis_names))
+
+
 def _seq_shard_body(body, rc: RunConfig, enabled: bool):
     """Scan-boundary hygiene for the saved residual stream.
 
@@ -342,12 +385,19 @@ def forward(params, cfg: ModelConfig, rc: RunConfig, tokens: jax.Array,
             positions: Optional[jax.Array] = None,
             cache: Optional[Dict[str, Any]] = None,
             img_embed: Optional[jax.Array] = None,
+            last_logits_only: bool = False,
             ) -> Tuple[jax.Array, Optional[Dict[str, Any]],
                        Dict[str, jax.Array]]:
     """tokens: (B, S) int32 — or (B, S, n_codebooks) for audio.
 
     Returns (logits, new_cache, metrics).  For audio, logits is
     (B, S, n_codebooks, V).
+
+    ``last_logits_only`` slices the residual stream to the final position
+    BEFORE the unembedding so the (B, S, V) logits tensor never
+    materializes — prefill only ever consumes ``logits[:, -1]``, and at
+    32k × 256k-vocab the full tensor is the single largest buffer in the
+    lowered step (repro.plan ``last_token_logits`` mitigation rung).
     """
     fam = cfg.family
     cdt = jnp.dtype(rc.compute_dtype)
@@ -389,6 +439,7 @@ def forward(params, cfg: ModelConfig, rc: RunConfig, tokens: jax.Array,
         def body(carry, xs):
             h = carry
             p, kv = xs
+            p = _maybe_pin(p, cfg, rc)
             h, new_kv = _dense_layer(p, h, cfg, positions,
                                      kv if use_cache else None)
             return h, new_kv
@@ -402,6 +453,7 @@ def forward(params, cfg: ModelConfig, rc: RunConfig, tokens: jax.Array,
             def body(carry, xs):
                 h, aux, drop = carry
                 p, kv = xs
+                p = _maybe_pin(p, cfg, rc)
                 h, new_kv, a, d = _moe_layer(p, h, cfg, positions,
                                              kv if use_cache else None)
                 return (h, aux + a, drop + d), new_kv
@@ -414,6 +466,7 @@ def forward(params, cfg: ModelConfig, rc: RunConfig, tokens: jax.Array,
             def body(carry, xs):
                 h, aux, drop = carry
                 p, kv = xs
+                p = _maybe_pin(p, cfg, rc)
                 kv_d = jax.tree.map(lambda c: c[0], kv) if use_cache else None
                 kv_m = jax.tree.map(lambda c: c[1], kv) if use_cache else None
                 h, nkv_d = _dense_layer(
@@ -434,6 +487,7 @@ def forward(params, cfg: ModelConfig, rc: RunConfig, tokens: jax.Array,
         def body(carry, xs):
             h = carry
             p, c = xs
+            p = _maybe_pin(p, cfg, rc)
             h, new_c = _ssm_layer(p, h, cfg, c if use_cache else None)
             return h, new_c
         cs = cache["ssm"] if use_cache else _dummy(n_units)
@@ -446,6 +500,7 @@ def forward(params, cfg: ModelConfig, rc: RunConfig, tokens: jax.Array,
         def body(carry, xs):
             h = carry
             p, lora, c_ssm, c_kv = xs
+            p = _maybe_pin(p, cfg, rc)
             for j in range(per):
                 pj = jax.tree.map(lambda a: a[j], p)
                 cj = (jax.tree.map(lambda a: a[j], c_ssm)
@@ -472,6 +527,7 @@ def forward(params, cfg: ModelConfig, rc: RunConfig, tokens: jax.Array,
         def body(carry, xs):
             h = carry
             p, kv, ckv = xs
+            p = _maybe_pin(p, cfg, rc)
             for j in range(per - 1):
                 pj = jax.tree.map(lambda a: a[j], p["self"])
                 kvj = jax.tree.map(lambda a: a[j], kv) if use_cache else None
@@ -508,6 +564,8 @@ def forward(params, cfg: ModelConfig, rc: RunConfig, tokens: jax.Array,
     else:
         raise ValueError(fam)
 
+    if last_logits_only and x.shape[1] > 1:
+        x = x[:, -1:]
     x = L.rms_norm(params["final_norm"], x, cfg.norm_eps)
     if fam == "audio":
         logits = jnp.einsum("bsd,qdv->bsqv", x,

@@ -1,0 +1,26 @@
+"""Memory-capacity planner: fit every dry-run cell into the per-device
+HBM budget via the HERMES hybrid-memory mitigation ladder.
+
+* :mod:`repro.plan.capacity` — analytic per-cell budget breakdown
+  (params, optimizer state, KV/SSM cache, activations, logits)
+  reconciled against ``compiled.memory_analysis()`` numbers;
+* :mod:`repro.plan.mitigate` — the ordered mitigation ladder and the
+  per-cell planning pass (``plan_cell``);
+* :mod:`repro.plan.report` — the per-cell verdict table written to
+  ``artifacts/plan/``.
+
+``python -m repro.launch.dryrun --plan`` drives the three against the
+full (arch × shape × mesh) matrix.
+"""
+
+from repro.plan.capacity import (BUDGET_BYTES, MeshSpec, cell_breakdown,
+                                 device_bytes, mesh_spec)
+from repro.plan.mitigate import (LADDERS, PlanDecision, Rung, plan_cell,
+                                 rungs_for)
+from repro.plan.report import write_report
+
+__all__ = [
+    "BUDGET_BYTES", "MeshSpec", "cell_breakdown", "device_bytes",
+    "mesh_spec", "LADDERS", "PlanDecision", "Rung", "plan_cell",
+    "rungs_for", "write_report",
+]

@@ -1,0 +1,280 @@
+"""Analytic per-device memory budget for one (arch × shape × mesh) cell.
+
+Components are computed from the same sources the lowering uses —
+``jax.eval_shape`` over the real initializers and the PartitionSpec
+trees from ``dist/sharding.py`` — so the param/state/cache terms are
+exact per-device byte counts, not heuristics.  Activation/logits/temp
+terms are first-order models of what the lowered step materializes; the
+``reconcile`` step compares the analytic total against
+``memory_analysis()`` from the dry-run artifact and records the
+residual, so drift between model and measurement is always visible in
+the plan report instead of silently mispredicting.
+
+All sizes are BYTES PER DEVICE.  The budget is the 16 GiB HBM of a TPU
+v5e chip (DESIGN §7), applied to the TPU-adjusted peak (XLA:CPU
+float-normalization buffers subtracted — see
+``hlo_analysis.cpu_artifact_bytes``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import SHAPES, ModelConfig, RunConfig
+from repro.configs.registry import ARCHS, get_run_config
+
+#: per-device HBM budget: TPU v5e, 16 GiB/chip (DESIGN §7)
+BUDGET_BYTES = 16 << 30
+
+#: bytes a bf16 buffer effectively costs in XLA:CPU temps (the f32
+#: float-normalization copy rides along); used only for the soft
+#: activation/logits terms, never for the exact sharded-state terms
+_F32_RIDE = 3.0
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshSpec:
+    """Mesh stand-in for spec/shard math — no devices, just geometry."""
+
+    axis_names: Tuple[str, ...]
+    shape: Dict[str, int]
+
+    @property
+    def size(self) -> int:
+        n = 1
+        for v in self.shape.values():
+            n *= v
+        return n
+
+
+#: the two production meshes of the dry-run matrix
+MESHES: Dict[str, MeshSpec] = {
+    "single": MeshSpec(("data", "model"), {"data": 16, "model": 16}),
+    "multi": MeshSpec(("pod", "data", "model"),
+                      {"pod": 2, "data": 16, "model": 16}),
+}
+
+
+def mesh_spec(mesh_name: str) -> MeshSpec:
+    return MESHES[mesh_name]
+
+
+def _is_spec(x) -> bool:
+    return isinstance(x, P)
+
+
+def _shards(spec: P, sizes: Dict[str, int]) -> int:
+    n = 1
+    for entry in spec:
+        if entry is None:
+            continue
+        names = (entry,) if isinstance(entry, str) else entry
+        for a in names:
+            n *= sizes.get(a, 1)
+    return n
+
+
+def device_bytes(shapes: Any, specs: Any, mesh: MeshSpec) -> int:
+    """Per-device bytes of a sharded pytree: Σ leaf_bytes / shards.
+
+    ``shapes`` is a ShapeDtypeStruct tree (``jax.eval_shape``), ``specs``
+    the matching PartitionSpec tree.  Axes absent from the mesh are
+    ignored (mirrors ``sharding.filter_spec``).
+    """
+    sizes = {a: mesh.shape[a] for a in mesh.axis_names}
+    total = 0
+    for leaf, spec in zip(jax.tree.leaves(shapes),
+                          jax.tree.leaves(specs, is_leaf=_is_spec)):
+        nbytes = leaf.size * jnp.dtype(leaf.dtype).itemsize
+        total += nbytes // _shards(spec, sizes)
+    return int(total)
+
+
+def _batch_shards(mesh: MeshSpec) -> int:
+    n = 1
+    for a in ("pod", "data"):
+        n *= mesh.shape.get(a, 1)
+    return n
+
+
+def _tp_shards(mesh: MeshSpec) -> int:
+    return mesh.shape.get("model", 1)
+
+
+@dataclasses.dataclass
+class Breakdown:
+    """Per-device analytic budget for one cell (bytes)."""
+
+    arch: str
+    shape: str
+    mesh: str
+    params: int = 0           # master params (train) / serving params
+    params_compute: int = 0   # transient compute-dtype cast of the params
+    opt_state: int = 0        # optimizer moments / factors
+    grads: int = 0            # accumulated gradients (train)
+    cache: int = 0            # KV / SSM decode-cache
+    activations: int = 0      # live activations (one microbatch/chunk)
+    logits: int = 0           # logits + loss intermediates
+    measured_peak: int = 0    # memory_analysis() peak (TPU-adjusted)
+    residual: int = 0         # measured - analytic (XLA temps, copies)
+
+    @property
+    def total_analytic(self) -> int:
+        return (self.params + self.params_compute + self.opt_state
+                + self.grads + self.cache + self.activations + self.logits)
+
+    def as_dict(self) -> Dict[str, int]:
+        d = dataclasses.asdict(self)
+        d["total_analytic"] = self.total_analytic
+        return d
+
+
+def cell_breakdown(arch: str, shape_name: str, mesh_name: str,
+                   rc: Optional[RunConfig] = None,
+                   measured_peak: int = 0) -> Breakdown:
+    """Analytic per-device budget breakdown for one cell.
+
+    Exact terms (eval_shape × spec): params, optimizer state, grads,
+    decode cache.  Modeled terms: activations, logits.  When
+    ``measured_peak`` (TPU-adjusted ``memory_analysis()`` peak) is
+    given, the residual records what the analytic terms do not cover.
+    """
+    from repro.dist import sharding as shd
+    from repro.models import model as mdl
+
+    cfg = ARCHS[arch]
+    sc = SHAPES[shape_name]
+    mesh = mesh_spec(mesh_name)
+    if rc is None:
+        rc = get_run_config(arch, shape_name)
+    bd = Breakdown(arch=arch, shape=shape_name, mesh=mesh_name,
+                   measured_peak=int(measured_peak))
+
+    pdt = jnp.dtype(rc.param_dtype)
+    cdt = jnp.dtype(rc.compute_dtype)
+    pshapes = jax.eval_shape(
+        lambda: mdl.init_params(cfg, jax.random.PRNGKey(0), dtype=pdt))
+    pspecs = shd.param_specs(cfg, fsdp_pod=rc.fsdp_pod)
+    bd.params = device_bytes(pshapes, pspecs, mesh)
+    cast_shapes = jax.tree.map(
+        lambda l: jax.ShapeDtypeStruct(l.shape, cdt)
+        if jnp.issubdtype(l.dtype, jnp.floating) else l, pshapes)
+    bd.params_compute = (device_bytes(cast_shapes, pspecs, mesh)
+                         if pdt != cdt else 0)
+
+    bshards = _batch_shards(mesh)
+    tp = _tp_shards(mesh)
+    d_model, vocab = cfg.d_model, cfg.vocab_size
+
+    if sc.kind == "train":
+        from repro.train.step import init_train_state, train_state_specs
+        micro = max(1, min(rc.microbatches, sc.global_batch // bshards))
+        state_shapes = jax.eval_shape(
+            lambda: init_train_state(cfg, rc, jax.random.PRNGKey(0)))
+        state_specs = train_state_specs(cfg, rc)
+        bd.opt_state = device_bytes(state_shapes.opt, state_specs.opt, mesh)
+        gdt = jnp.dtype(rc.grad_dtype)
+        gshapes = jax.tree.map(
+            lambda l: jax.ShapeDtypeStruct(l.shape, gdt), pshapes)
+        bd.grads = device_bytes(gshapes, pspecs, mesh)
+        # live activations: one microbatch, full remat saves ONE residual
+        # per scanned layer (+ the flash working set ~2 extra residuals);
+        # act_seq_shard spreads the saved residuals over the model axis
+        tokens_dev = sc.global_batch // micro * sc.seq_len // bshards
+        act_bytes = tokens_dev * d_model * cdt.itemsize
+        saved = cfg.n_layers * act_bytes
+        if rc.act_seq_shard and sc.seq_len >= 1024:
+            saved //= tp
+        bd.activations = int(saved + 3 * act_bytes * _F32_RIDE)
+        # logits + f32 cross-entropy intermediates, vocab TP-sharded
+        bd.logits = int(tokens_dev * (vocab // tp)
+                        * 4 * 2)                   # f32 logits + lse/grad
+    else:
+        cache_shapes = jax.eval_shape(
+            lambda: mdl.init_cache(cfg, sc.global_batch, sc.seq_len,
+                                   dtype=cdt,
+                                   img_tokens=cfg.n_img_tokens or 1))
+        cache_specs = shd.cache_specs(cfg, sc.global_batch, mesh,
+                                      seq_shard=rc.kv_seq_shard)
+        bd.cache = device_bytes(cache_shapes, cache_specs, mesh)
+        if sc.kind == "prefill":
+            nch = max(1, rc.prefill_chunks)
+            tokens_dev = sc.global_batch * sc.seq_len // bshards // nch
+            act_bytes = tokens_dev * d_model * cdt.itemsize
+            bd.activations = int(3 * act_bytes * _F32_RIDE)
+            if rc.logits_mode == "last":
+                bd.logits = int(sc.global_batch // bshards // nch
+                                * (vocab // tp) * 4 * 2)
+            else:
+                bd.logits = int(tokens_dev * (vocab // tp)
+                                * cdt.itemsize * _F32_RIDE)
+        else:  # decode: one token per sequence
+            tokens_dev = max(1, sc.global_batch // bshards)
+            bd.logits = int(tokens_dev * (vocab // tp) * 4 * 2)
+            bd.activations = int(tokens_dev * d_model * 4 * cfg.n_layers
+                                 // max(1, cfg.n_layers))  # negligible
+
+    if measured_peak:
+        bd.residual = int(measured_peak) - bd.total_analytic
+    return bd
+
+
+def kv_cache_device_bytes(arch: str, shape_name: str, mesh_name: str,
+                          rc: Optional[RunConfig] = None) -> int:
+    """Per-device decode/prefill cache bytes under the cell's specs —
+    the quantity the paged-KV host-offload rung can move to the
+    capacity tier (tpu/kv_cache.py page pools)."""
+    from repro.dist import sharding as shd
+    from repro.models import model as mdl
+    cfg = ARCHS[arch]
+    sc = SHAPES[shape_name]
+    if sc.kind == "train":
+        return 0
+    mesh = mesh_spec(mesh_name)
+    if rc is None:
+        rc = get_run_config(arch, shape_name)
+    cdt = jnp.dtype(rc.compute_dtype)
+    shapes = jax.eval_shape(
+        lambda: mdl.init_cache(cfg, sc.global_batch, sc.seq_len, dtype=cdt,
+                               img_tokens=cfg.n_img_tokens or 1))
+    specs = shd.cache_specs(cfg, sc.global_batch, mesh,
+                            seq_shard=rc.kv_seq_shard)
+    return device_bytes(shapes, specs, mesh)
+
+
+def opt_state_device_bytes(arch: str, shape_name: str, mesh_name: str,
+                           rc: Optional[RunConfig] = None
+                           ) -> Tuple[int, int]:
+    """(per-device optimizer-state bytes, streaming working-set bytes).
+
+    The working set is the 2-leaf double buffer ``OffloadedAdamW``
+    keeps resident while streaming moments through the device
+    (tpu/offload.py): 2 × (m + v) of the largest parameter leaf.
+    """
+    from repro.dist import sharding as shd
+    from repro.models import model as mdl
+    from repro.train.step import init_train_state, train_state_specs
+    cfg = ARCHS[arch]
+    if SHAPES[shape_name].kind != "train":
+        return 0, 0
+    mesh = mesh_spec(mesh_name)
+    if rc is None:
+        rc = get_run_config(arch, shape_name)
+    state_shapes = jax.eval_shape(
+        lambda: init_train_state(cfg, rc, jax.random.PRNGKey(0)))
+    state_specs = train_state_specs(cfg, rc)
+    opt_dev = device_bytes(state_shapes.opt, state_specs.opt, mesh)
+    sizes = {a: mesh.shape[a] for a in mesh.axis_names}
+    biggest = 0
+    pspecs = shd.param_specs(cfg, fsdp_pod=rc.fsdp_pod)
+    odt = jnp.dtype(rc.optimizer_dtype)
+    for leaf, spec in zip(jax.tree.leaves(state_shapes.params),
+                          jax.tree.leaves(pspecs, is_leaf=_is_spec)):
+        nb = leaf.size * odt.itemsize // _shards(spec, sizes)
+        biggest = max(biggest, nb)
+    return int(opt_dev), int(2 * 2 * biggest)

@@ -1,0 +1,288 @@
+"""The mitigation ladder: ordered capacity levers per cell kind.
+
+Ladder discipline (HERMES hybrid-memory doctrine, DESIGN §1 Track B):
+cheapest lever first — levers that only change WHAT the lowered step
+materializes come before levers that move state across memory tiers,
+which come before admitting a hard floor.  Every rung is either
+
+* ``relower`` — a ``RunConfig`` override; the cell is re-lowered and
+  re-measured, so its effect lands in ``memory_analysis()`` numbers; or
+* ``analytic`` — a memory-TIER move the XLA:CPU dry-run cannot express
+  (host DRAM is not addressable from a lowered CPU executable): the
+  planner subtracts the state it moves to the capacity tier and adds
+  back the streaming working set, citing the runtime component that
+  implements the move (tpu/offload.py, tpu/kv_cache.py).
+
+The ladders, in rung order:
+
+  train    remat_full         → full activation rematerialization
+           act_seq_shard      → saved residuals' seq dim over MODEL
+           fsdp_gather_in_loop→ per-layer JIT weight gathers in the scan
+           microbatch_max     → grad-accum down to 1 seq/shard/micro
+           fsdp_pod           → FSDP spans the pod axis (multi mesh)
+           opt_offload        → AdamW moments to host DRAM
+                                (OffloadedAdamW 2-leaf double buffer)
+  prefill  last_token_logits  → never materialize (B, S, V)
+           prefill_chunk_max  → scan the batch in cache-writing chunks
+           fsdp_gather_in_loop→ per-layer JIT weight gathers in the scan
+           kv_seq_shard       → cache seq dim over the idle model axis
+  decode   kv_seq_shard       → cache seq dim over the idle model axis
+           fsdp_gather_in_loop→ per-layer JIT weight gathers in the scan
+           paged_kv_offload   → cold KV pages to the host pool
+                                (PagedKVManager, hbm_kv_budget_frac
+                                stays resident, prefetch_for_decode
+                                streams pages back ahead of the window)
+
+A cell that exhausts its ladder gets a hard-floor explanation built
+from the capacity breakdown — never a silent pass.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+from repro.configs.base import SHAPES, RunConfig
+from repro.configs.registry import ARCHS, get_run_config
+from repro.plan.capacity import (BUDGET_BYTES, Breakdown, cell_breakdown,
+                                 kv_cache_device_bytes, mesh_spec,
+                                 opt_state_device_bytes)
+
+
+@dataclasses.dataclass(frozen=True)
+class Rung:
+    name: str
+    kind: str                       # "relower" | "analytic"
+    overrides: Dict[str, Any]       # RunConfig overrides (relower rungs)
+    note: str                       # one-line mechanism description
+
+
+_TRAIN = (
+    Rung("remat_full", "relower", {"remat": "full"},
+         "rematerialize activations (jax.checkpoint per scanned unit)"),
+    Rung("act_seq_shard", "relower", {"act_seq_shard": True},
+         "saved residuals' seq dim sharded over MODEL between layers"),
+    Rung("fsdp_gather_in_loop", "relower", {"fsdp_gather_in_loop": True},
+         "pin scanned weights to their FSDP spec inside the layer scan "
+         "so all-gathers happen per layer, not as the hoisted stack"),
+    Rung("microbatch_max", "relower", {},   # value computed per cell
+         "split the global batch down to 1 sequence/shard/microbatch"),
+    Rung("fsdp_pod", "relower", {"fsdp_pod": True},
+         "FSDP spans the pod axis (halves per-chip state, multi mesh)"),
+    Rung("opt_offload", "analytic", {"opt_offload": True},
+         "optimizer moments stream from host DRAM (tpu/offload.py "
+         "OffloadedAdamW): HBM holds a 2-leaf double buffer"),
+)
+
+_PREFILL = (
+    Rung("last_token_logits", "relower", {"logits_mode": "last"},
+         "unembed only the final position (prefill consumes nothing "
+         "else); the (B,S,V) logits tensor never materializes"),
+    Rung("prefill_chunk_max", "relower", {},  # value computed per cell
+         "scan the prefill batch in chunks writing the shared cache "
+         "in place — live activations are one chunk's"),
+    Rung("fsdp_gather_in_loop", "relower", {"fsdp_gather_in_loop": True},
+         "pin scanned weights to their FSDP spec inside the layer scan "
+         "so all-gathers happen per layer, not as the hoisted stack"),
+    Rung("kv_seq_shard", "relower", {"kv_seq_shard": True},
+         "cache seq dim over the model axis the KV heads left idle"),
+    Rung("paged_kv_offload", "analytic", {},
+         "the prefill cache is write-once: filled pages demote to the "
+         "host-DRAM pool as the chunk moves on (tpu/kv_cache.py); "
+         "hbm_kv_budget_frac of the cache stays HBM-resident"),
+)
+
+_DECODE = (
+    Rung("kv_seq_shard", "relower", {"kv_seq_shard": True},
+         "cache seq dim over the model axis the KV heads left idle"),
+    Rung("fsdp_gather_in_loop", "relower", {"fsdp_gather_in_loop": True},
+         "pin scanned weights to their FSDP spec inside the layer scan "
+         "so all-gathers happen per layer, not as the hoisted stack"),
+    Rung("paged_kv_offload", "analytic", {},
+         "cold KV pages demote to the host-DRAM pool (tpu/kv_cache.py "
+         "PagedKVManager); hbm_kv_budget_frac of the cache stays "
+         "HBM-resident, prefetch_for_decode streams pages back ahead "
+         "of the attention window"),
+)
+
+LADDERS: Dict[str, Tuple[Rung, ...]] = {
+    "train": _TRAIN,
+    "prefill": _PREFILL,
+    "decode": _DECODE,
+}
+
+
+def rungs_for(kind: str) -> Tuple[Rung, ...]:
+    return LADDERS[kind]
+
+
+def _batch_shards(mesh_name: str) -> int:
+    m = mesh_spec(mesh_name)
+    n = 1
+    for a in ("pod", "data"):
+        n *= m.shape.get(a, 1)
+    return n
+
+
+def rung_applies(rung: Rung, arch: str, shape_name: str, mesh_name: str,
+             rc_kw: Dict[str, Any]) -> Optional[Dict[str, Any]]:
+    """None if the rung is a no-op for this cell; else the overrides."""
+    cfg = ARCHS[arch]
+    sc = SHAPES[shape_name]
+    rc = get_run_config(arch, shape_name, **rc_kw)
+    shards = _batch_shards(mesh_name)
+    if rung.name == "remat_full":
+        return None if rc.remat == "full" else dict(rung.overrides)
+    if rung.name == "act_seq_shard":
+        if rc.act_seq_shard or sc.seq_len < 1024:
+            return None
+        return dict(rung.overrides)
+    if rung.name == "microbatch_max":
+        max_micro = max(1, sc.global_batch // shards)
+        cur = max(1, min(rc.microbatches, max_micro))
+        return (None if cur >= max_micro
+                else {"microbatches": max_micro})
+    if rung.name == "fsdp_gather_in_loop":
+        return (None if rc.fsdp_gather_in_loop
+                else dict(rung.overrides))
+    if rung.name == "fsdp_pod":
+        if rc.fsdp_pod or mesh_name != "multi":
+            return None
+        return dict(rung.overrides)
+    if rung.name == "opt_offload":
+        if rc.opt_offload or rc.optimizer != "adamw":
+            return None          # adafactor factors are already tiny
+        return dict(rung.overrides)
+    if rung.name == "last_token_logits":
+        return None if rc.logits_mode == "last" else dict(rung.overrides)
+    if rung.name == "prefill_chunk_max":
+        max_chunks = max(1, sc.global_batch // shards)
+        if rc.prefill_chunks >= max_chunks or max_chunks <= 1:
+            return None
+        return {"prefill_chunks": max_chunks}
+    if rung.name == "kv_seq_shard":
+        if rc.kv_seq_shard:
+            return None
+        # only helps when the model axis is not already on the KV heads
+        m = mesh_spec(mesh_name)
+        tp = m.shape.get("model", 1)
+        if cfg.n_kv_heads >= tp and cfg.n_kv_heads % tp == 0:
+            return None
+        if sc.seq_len % tp:
+            return None
+        return dict(rung.overrides)
+    if rung.name == "paged_kv_offload":
+        return {}
+    return dict(rung.overrides)
+
+
+def analytic_savings(rung: Rung, arch: str, shape_name: str,
+                     mesh_name: str, rc: RunConfig) -> Tuple[int, str]:
+    """(bytes moved off-device, note) for an analytic rung."""
+    if rung.name == "opt_offload":
+        opt_dev, working = opt_state_device_bytes(
+            arch, shape_name, mesh_name, rc)
+        saving = max(0, opt_dev - working)
+        note = (f"moves {opt_dev / 2**30:.2f} GiB moments to host DRAM, "
+                f"keeps {working / 2**30:.2f} GiB double buffer resident")
+        return saving, note
+    if rung.name == "paged_kv_offload":
+        kv_dev = kv_cache_device_bytes(arch, shape_name, mesh_name, rc)
+        frac = rc.hbm_kv_budget_frac
+        saving = int((1.0 - frac) * kv_dev)
+        note = (f"demotes {(1 - frac):.0%} of the {kv_dev / 2**30:.2f} GiB "
+                f"per-device KV to the host pool "
+                f"(hbm_kv_budget_frac={frac})")
+        return saving, note
+    return 0, ""
+
+
+@dataclasses.dataclass
+class PlanDecision:
+    """What the planner decided for one cell (pre-verification)."""
+
+    arch: str
+    shape: str
+    mesh: str
+    before_peak: int
+    rungs: List[str] = dataclasses.field(default_factory=list)
+    rc_overrides: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    analytic: List[Dict[str, Any]] = dataclasses.field(default_factory=list)
+    breakdown: Optional[Breakdown] = None
+
+    def as_dict(self) -> Dict[str, Any]:
+        d = dataclasses.asdict(self)
+        d.pop("breakdown", None)
+        if self.breakdown is not None:
+            d["breakdown"] = self.breakdown.as_dict()
+        return d
+
+
+def plan_cell(arch: str, shape_name: str, mesh_name: str,
+              before_peak: int, budget: int = BUDGET_BYTES,
+              rc_kw: Optional[Dict[str, Any]] = None) -> PlanDecision:
+    """DECISION-ONLY ladder walk: which rungs would apply to this cell.
+
+    Stacks every applicable rung without lowering anything — cheap
+    introspection for tests and tooling.  The production pass is
+    ``launch.dryrun.plan_cell_pass``, which climbs the same ladder
+    (``rungs_for``) one measured re-lower at a time and REVERTS rungs
+    that regress the peak; measurement, not this model, decides the
+    final verdict and rung set.
+    """
+    kind = SHAPES[shape_name].kind
+    dec = PlanDecision(arch=arch, shape=shape_name, mesh=mesh_name,
+                       before_peak=int(before_peak),
+                       rc_overrides=dict(rc_kw or {}))
+    for rung in rungs_for(kind):
+        ov = rung_applies(rung, arch, shape_name, mesh_name,
+                          dec.rc_overrides)
+        if ov is None:
+            continue
+        if rung.kind == "relower":
+            dec.rungs.append(rung.name)
+            dec.rc_overrides.update(ov)
+        else:
+            rc = get_run_config(arch, shape_name, **dec.rc_overrides)
+            saving, note = analytic_savings(
+                rung, arch, shape_name, mesh_name, rc)
+            if saving > 0:
+                dec.rungs.append(rung.name)
+                dec.analytic.append({"rung": rung.name,
+                                     "saving_bytes": int(saving),
+                                     "note": note})
+    dec.breakdown = cell_breakdown(
+        arch, shape_name, mesh_name,
+        rc=get_run_config(arch, shape_name, **dec.rc_overrides),
+        measured_peak=before_peak)
+    return dec
+
+
+def hard_floor_explanation(bd: Breakdown, after_peak: int,
+                           analytic_total: int,
+                           budget: int = BUDGET_BYTES) -> str:
+    """Why this cell cannot fit even at the bottom of the ladder."""
+    gib = 2 ** 30
+    parts = [
+        f"params {bd.params / gib:.2f}",
+        f"params_compute {bd.params_compute / gib:.2f}",
+        f"opt_state {bd.opt_state / gib:.2f}",
+        f"grads {bd.grads / gib:.2f}",
+        f"cache {bd.cache / gib:.2f}",
+        f"activations {bd.activations / gib:.2f}",
+        f"logits {bd.logits / gib:.2f}",
+    ]
+    floor = (bd.params + bd.params_compute + bd.opt_state + bd.grads
+             + bd.cache + bd.activations + bd.logits)
+    resid = max(0, after_peak - floor)
+    return (
+        f"hard floor: peak {after_peak / gib:.2f} GiB after the full "
+        f"ladder (analytic tier moves {analytic_total / gib:.2f} GiB) "
+        f"vs budget {budget / gib:.2f} GiB.  Sharded-state floor/device "
+        f"[GiB]: " + ", ".join(parts) + f" (Σ ≈ {floor / gib:.2f}); the "
+        f"remaining {resid / gib:.2f} GiB is lowered-step working set "
+        f"(scan/attention/optimizer temps XLA keeps live at this "
+        f"mesh/precision) — shrinking it needs more chips (wider "
+        f"FSDP/TP), lower precision, or kernel-level streaming, not a "
+        f"memory tier."
+    )

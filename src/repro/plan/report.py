@@ -1,0 +1,130 @@
+"""Per-cell verdict table for the capacity pass → ``artifacts/plan/``.
+
+Reads the (regenerated) dry-run artifacts, aggregates every cell's
+``plan`` section, and writes
+
+* ``plan_report.json`` — machine-readable verdicts + breakdowns;
+* ``plan_report.md``   — the before/after table the ROADMAP cites.
+
+Verdicts:
+
+  fits_asis      — was never over budget
+  fits           — over budget before; fits after re-lowered mitigations
+  fits_offload   — fits only after the analytic memory-tier rungs
+                   (host-DRAM offload via tpu/offload.py / tpu/kv_cache.py)
+  hard_floor     — cannot fit at this mesh/precision; explanation says why
+"""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+from typing import Any, Dict, List, Optional
+
+from repro.plan.capacity import BUDGET_BYTES
+
+ARTIFACTS = Path(__file__).resolve().parents[3] / "artifacts"
+DRYRUN = ARTIFACTS / "dryrun"
+PLAN = ARTIFACTS / "plan"
+
+_GIB = 2 ** 30
+
+
+def _peak(rec: Dict[str, Any]) -> int:
+    mem = rec.get("memory", {})
+    return int(mem.get("peak_bytes_per_device_tpu_adjusted",
+                       mem.get("peak_bytes_per_device", 0)))
+
+
+def collect(dryrun_dir: Path = DRYRUN) -> List[Dict[str, Any]]:
+    rows = []
+    for p in sorted(dryrun_dir.glob("*.json")):
+        rec = json.loads(p.read_text())
+        if rec.get("status") != "ok":
+            continue
+        peak = _peak(rec)
+        plan = rec.get("plan")
+        if plan is None:
+            verdict = "fits_asis" if peak <= BUDGET_BYTES else "unplanned"
+            rows.append({
+                "arch": rec["arch"], "shape": rec["shape"],
+                "mesh": rec["mesh_name"], "verdict": verdict,
+                "before_gib": round(peak / _GIB, 2),
+                "after_gib": round(peak / _GIB, 2),
+                "projected_gib": round(peak / _GIB, 2),
+                "rungs": [], "explanation": "",
+            })
+            continue
+        rows.append({
+            "arch": rec["arch"], "shape": rec["shape"],
+            "mesh": rec["mesh_name"], "verdict": plan["verdict"],
+            "before_gib": round(plan["before_peak_bytes"] / _GIB, 2),
+            "after_gib": round(plan["after_peak_bytes"] / _GIB, 2),
+            "projected_gib": round(plan["projected_peak_bytes"] / _GIB, 2),
+            "rungs": plan["rungs"],
+            "explanation": plan.get("explanation", ""),
+            "analytic": plan.get("analytic", []),
+        })
+    return rows
+
+
+def write_report(dryrun_dir: Path = DRYRUN, plan_dir: Path = PLAN,
+                 verbose: bool = True) -> Dict[str, Any]:
+    rows = collect(dryrun_dir)
+    counts: Dict[str, int] = {}
+    for r in rows:
+        counts[r["verdict"]] = counts.get(r["verdict"], 0) + 1
+    over_unexplained = [
+        r for r in rows
+        if r["projected_gib"] * _GIB > BUDGET_BYTES
+        and r["verdict"] not in ("hard_floor",)]
+    payload = {
+        "budget_gib": BUDGET_BYTES / _GIB,
+        "n_cells": len(rows),
+        "verdicts": counts,
+        "over_budget_unexplained": len(over_unexplained),
+        "cells": rows,
+    }
+    plan_dir.mkdir(parents=True, exist_ok=True)
+    (plan_dir / "plan_report.json").write_text(json.dumps(payload, indent=1))
+
+    md = ["# Capacity plan — dry-run matrix vs 16 GiB/device (v5e)", "",
+          f"Budget: {BUDGET_BYTES / _GIB:.0f} GiB/device, applied to the "
+          f"TPU-adjusted peak.  Verdicts: {counts}.  "
+          f"Over-budget-and-unexplained: {len(over_unexplained)}.", "",
+          "| arch | shape | mesh | before GiB | after GiB | projected GiB "
+          "| verdict | ladder rungs |",
+          "|---|---|---|---:|---:|---:|---|---|"]
+    order = {"hard_floor": 0, "fits_offload": 1, "fits": 2,
+             "unplanned": 3, "fits_asis": 4}
+    for r in sorted(rows, key=lambda r: (order.get(r["verdict"], 9),
+                                         -r["before_gib"])):
+        md.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+                  f"| {r['before_gib']:.2f} | {r['after_gib']:.2f} "
+                  f"| {r['projected_gib']:.2f} | {r['verdict']} "
+                  f"| {', '.join(r['rungs']) or '—'} |")
+    md.append("")
+    hard = [r for r in rows if r["verdict"] == "hard_floor"]
+    if hard:
+        md.append("## Hard floors")
+        md.append("")
+        for r in hard:
+            md.append(f"* **{r['arch']} × {r['shape']} × {r['mesh']}** — "
+                      f"{r['explanation']}")
+        md.append("")
+    offl = [r for r in rows if r["verdict"] == "fits_offload"]
+    if offl:
+        md.append("## Analytic tier moves (host-DRAM offload)")
+        md.append("")
+        for r in offl:
+            for a in r.get("analytic", []):
+                md.append(f"* {r['arch']} × {r['shape']} × {r['mesh']} — "
+                          f"{a['rung']}: {a['note']}")
+        md.append("")
+    (plan_dir / "plan_report.md").write_text("\n".join(md))
+
+    if verbose:
+        print(f"[plan] {len(rows)} cells: {counts}; "
+              f"over-budget-and-unexplained: {len(over_unexplained)}")
+        print(f"[plan] wrote {plan_dir / 'plan_report.json'} and .md")
+    return payload

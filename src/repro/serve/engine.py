@@ -39,7 +39,8 @@ class Request:
 class ServingEngine:
     def __init__(self, cfg: ModelConfig, rc: RunConfig, params,
                  batch_slots: int = 4, max_seq: int = 512,
-                 greedy: bool = True, page_size: int = 16):
+                 greedy: bool = True, page_size: Optional[int] = None,
+                 hbm_frac: Optional[float] = None):
         self.cfg = cfg
         self.rc = rc
         self.params = params
@@ -52,11 +53,20 @@ class ServingEngine:
         self.active: List[Optional[Request]] = [None] * batch_slots
         # one dense cache per slot (batch=1) so slots swap independently
         self.caches: List[Optional[Dict]] = [None] * batch_slots
+        # page geometry from the RunConfig (the capacity planner's
+        # paged_kv_offload rung): hbm_kv_budget_frac of the per-slot
+        # pages stay in the bandwidth tier, the rest is host capacity
+        if page_size is None:
+            page_size = min(rc.kv_page_size, max(1, max_seq // 2))
+        if hbm_frac is None:
+            hbm_frac = rc.hbm_kv_budget_frac
         pages_per_seq = max(1, -(-max_seq // page_size))
+        total = batch_slots * pages_per_seq
+        hbm_pages = max(batch_slots, int(total * hbm_frac))
         self.pages = PagedKVManager(
             page_size=page_size,
-            hbm_budget_pages=batch_slots * pages_per_seq,
-            host_budget_pages=4 * batch_slots * pages_per_seq)
+            hbm_budget_pages=hbm_pages,
+            host_budget_pages=max(total - hbm_pages, 0) + 4 * total)
         self.steps = 0
 
     # -- API --------------------------------------------------------------------

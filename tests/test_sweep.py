@@ -179,6 +179,7 @@ SWEEP_POINT = {
     "ta.low_utility": 0.2,
     "ta.high_utility": 0.8,
     "ta.prefetch_rank": 1.5,
+    "ta.stream_rank": 1.0,
     "ta.sample": 8,
     "ta.bypass_utility": 0.1,
 }
