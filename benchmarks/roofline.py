@@ -10,32 +10,35 @@ Hardware constants (TPU v5e class, DESIGN §7):
 
 from __future__ import annotations
 
-import json
 from pathlib import Path
 from typing import Dict, List
 
+from repro.api.schema import (ROOFLINE_TERMS, V5E_HBM_BW, V5E_ICI_BW,
+                              V5E_PEAK_FLOPS, load_record)
+
 ARTIFACTS = Path(__file__).resolve().parent.parent / "artifacts" / "dryrun"
 
-PEAK_FLOPS = 197e12
-HBM_BW = 819e9
-ICI_BW = 50e9
+# hardware constants shared with launch/dryrun.py via api.schema
+PEAK_FLOPS = V5E_PEAK_FLOPS
+HBM_BW = V5E_HBM_BW
+ICI_BW = V5E_ICI_BW
 
-_LEVERS = {
-    "compute_s": "raise useful-FLOP ratio (less remat/causal waste) or "
-                 "shrink microbatch count",
-    "memory_s": "fuse/recompute streams; shard or offload the biggest "
-                "resident tensor",
-    "collective_s": "reshard to cut all-gather volume; overlap or "
-                    "compress collectives",
-}
+#: one lever per roofline term (keys = api.schema.ROOFLINE_TERMS)
+_LEVERS = dict(zip(ROOFLINE_TERMS, (
+    "raise useful-FLOP ratio (less remat/causal waste) or "
+    "shrink microbatch count",
+    "fuse/recompute streams; shard or offload the biggest "
+    "resident tensor",
+    "reshard to cut all-gather volume; overlap or "
+    "compress collectives",
+)))
 
 
 def load_cells(mesh: str = "single") -> List[Dict]:
-    cells = []
-    for p in sorted(ARTIFACTS.glob(f"*__{mesh}.json")):
-        rec = json.loads(p.read_text())
-        cells.append(rec)
-    return cells
+    # load_record reads both generations: bare pre-PR-5 records and the
+    # ArtifactV1 envelopes the `python -m repro` front door writes
+    return [load_record(p)
+            for p in sorted(ARTIFACTS.glob(f"*__{mesh}.json"))]
 
 
 def report(mesh: str = "single") -> List[Dict]:

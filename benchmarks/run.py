@@ -1,20 +1,25 @@
-"""Benchmark harness: one entry per paper table + roofline + kernels.
+"""Legacy benchmark harness — superseded by ``python -m repro``.
 
     PYTHONPATH=src python -m benchmarks.run [--scale S] [--skip-tables]
     PYTHONPATH=src python -m benchmarks.run --smoke   # CI: seconds
 
-``--smoke`` runs the paper tables at a tiny scale on the SoA engine plus
-the engine-throughput bench, and skips the jax kernel/roofline suites —
-a seconds-long end-to-end check for CI.
+Kept as a working shim: the table path now runs through the same
+``repro.api`` Runner as ``python -m repro table``, so both entry points
+produce bit-identical Metrics rows (tests/test_api.py asserts this).
+New work should use::
 
-Prints ``name,us_per_call,derived`` CSV lines per bench plus the
-paper-table comparisons and the 40-cell roofline report; the engine
-bench also writes machine-readable ``BENCH_sim.json``.
+    python -m repro table [--scale S] [--smoke]
+    python -m repro bench --smoke          # CI gate bundle
 """
 
 from __future__ import annotations
 
 import argparse
+import sys
+
+DEPRECATION_POINTER = ("[deprecated] `python -m benchmarks.run` → use "
+                       "`python -m repro table` (CI bundle: `python -m "
+                       "repro bench --smoke`)")
 
 
 def main() -> None:
@@ -53,4 +58,5 @@ def main() -> None:
 
 
 if __name__ == "__main__":
+    print(DEPRECATION_POINTER, file=sys.stderr)
     main()

@@ -1,132 +1,25 @@
-"""Design-space sweep CLI (the `repro.sweep` explorer's entry point).
+"""Legacy design-space sweep CLI — superseded by ``python -m repro sweep``.
 
-    PYTHONPATH=src python -m benchmarks.sweep                 # full grid
-    PYTHONPATH=src python -m benchmarks.sweep --smoke         # CI: seconds
-    PYTHONPATH=src python -m benchmarks.sweep --scale 0.1     # quick look
+    PYTHONPATH=src python -m benchmarks.sweep [--smoke] [--scale S]
 
-Enumerates a grid over PrefetchParams / cache-policy / tensor-aware
-knobs, evaluates the paper's cumulative four-row ladder per point on the
-SoA engine (process-parallel), and writes a JSON artifact with every
-ladder, the Pareto front over the tensor_aware rows, and the recommended
-trend-restoring point.  ``artifacts/sweep/`` is the artifact home;
-ROADMAP.md records the retuning this explorer produced.
+Thin shim: flags are identical to (and forwarded verbatim to)
+``python -m repro sweep``, which owns the implementation; the named
+grids live in ``repro.api.registry.SWEEP_GRIDS``.
 """
 
 from __future__ import annotations
 
-import argparse
-import json
-import time
-from pathlib import Path
+import sys
 
-ARTIFACTS = Path(__file__).resolve().parents[1] / "artifacts" / "sweep"
-
-#: full retuning grid: the axes that measurably move full-scale metrics
-#: (prefetch aggressiveness, which levels run the TA policy) plus the TA
-#: policy knobs that define its local design space.
-FULL_AXES = {
-    "prefetch.degree": [2, 3],
-    "prefetch.stride_confidence": [3, 5],
-    "l2.policy": ["lru", "tensor_aware"],
-    "ta.low_utility": [0.05, 0.2],
-    "ta.prefetch_rank": [2.5, 3.5],
-    "ta.stream_rank": [0.0, 1.5],
-}
-
-#: focused grid for the TA-vs-prefetch hit-margin question (ROADMAP
-#: "Next"): how should STREAMING-class lines rank against dead/cold
-#: resident tensors at the shared L3?
-STREAM_RANK_AXES = {
-    "ta.stream_rank": [0.0, 0.5, 1.5, 2.0],
-    "ta.low_utility": [0.05, 0.2],
-}
-
-#: CI-sized grid: 8 ladders, still spanning every axis kind
-SMOKE_AXES = {
-    "prefetch.degree": [2, 3],
-    "l2.policy": ["lru", "tensor_aware"],
-    "ta.prefetch_rank": [2.5, 3.5],
-}
-
-
-def run(scale: float, axes: dict, out_path: Path, engine: str = "soa",
-        processes=None, native: bool = True) -> dict:
-    from repro.sweep.driver import run_ladder_sweep
-    from repro.sweep.grid import enumerate_grid, grid_size
-
-    points = enumerate_grid(axes)
-    print(f"[sweep] {grid_size(axes)} points × 4-row ladder @ "
-          f"scale={scale}, engine={engine}")
-    t0 = time.time()
-    payload = run_ladder_sweep(points, scale=scale, engine=engine,
-                               processes=processes, native=native)
-    dt = time.time() - t0
-    payload["axes"] = {k: list(v) for k, v in axes.items()}
-    payload["wall_s"] = round(dt, 1)
-
-    n_front = len(payload["pareto_front"])
-    print(f"[sweep] {payload['n_points']} ladders "
-          f"({payload['n_unique_configs']} unique configs) in {dt:.1f}s — "
-          f"{payload['n_trend_ok']} trend-ok, {n_front} on the Pareto front")
-    for i in payload["pareto_front"]:
-        r = payload["points"][i]
-        ta = r["rows"]["tensor_aware"]
-        print(f"  pareto{'*' if r['trend_ok'] else ' '} "
-              f"lat={ta['latency_ns']:7.3f} bw={ta['bandwidth_gbps']:7.3f} "
-              f"hit={ta['hit_rate']:.4f} en={ta['energy_uj']:7.3f}  "
-              f"{r['label']}")
-    rec = payload["recommended"]
-    if rec is not None:
-        print(f"[sweep] recommended (trend-ok, max hit rate): {rec['label']}")
-    else:
-        print("[sweep] no trend-restoring point in this grid")
-
-    out_path.parent.mkdir(parents=True, exist_ok=True)
-    out_path.write_text(json.dumps(payload, indent=1))
-    print(f"[sweep] wrote {out_path}")
-    return payload
+DEPRECATION_POINTER = ("[deprecated] `python -m benchmarks.sweep` → use "
+                       "`python -m repro sweep` (same flags)")
 
 
 def main() -> None:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--scale", type=float, default=None,
-                    help="workload scale (default 1.0; 0.02 under --smoke)")
-    ap.add_argument("--engine", default="soa", choices=["soa", "object"])
-    ap.add_argument("--processes", type=int, default=None)
-    ap.add_argument("--smoke", action="store_true",
-                    help="CI-sized grid at tiny scale (seconds)")
-    ap.add_argument("--no-native", action="store_true",
-                    help="force the pure-Python SoA path")
-    ap.add_argument("--out", default=None, help="artifact path override")
-    ap.add_argument("--grid", default=None, choices=[None, "stream_rank"],
-                    help="named focused grid (stream_rank: the TA "
-                         "streaming-line victim-rank question)")
-    args = ap.parse_args()
-
-    axes = (STREAM_RANK_AXES if args.grid == "stream_rank"
-            else SMOKE_AXES if args.smoke else FULL_AXES)
-    scale = args.scale if args.scale is not None \
-        else (0.02 if args.smoke else 1.0)
-    tag = (f"{args.grid}_scale{scale:g}" if args.grid
-           else "smoke" if args.smoke
-           else f"scale{scale:g}")
-    out = Path(args.out) if args.out else ARTIFACTS / f"sweep_{tag}.json"
-    payload = run(scale, axes, out, engine=args.engine,
-                  processes=args.processes, native=not args.no_native)
-    if args.smoke:
-        # acceptance gate: every grid point evaluated, every ladder row
-        # carries finite positive metrics (a NaN/garbage regression in
-        # the sweep path must fail CI, and a non-empty front alone
-        # cannot — one always exists)
-        import math
-        from repro.sweep.grid import grid_size as _gs
-        assert payload["n_points"] == _gs(SMOKE_AXES), payload["n_points"]
-        for r in payload["points"]:
-            for cfg, row in r["rows"].items():
-                assert all(math.isfinite(v) and v > 0
-                           for v in row.values()), (r["label"], cfg, row)
-        assert payload["pareto_front"], "empty Pareto front"
+    from repro.cli import main as cli_main
+    raise SystemExit(cli_main(["sweep", *sys.argv[1:]]))
 
 
 if __name__ == "__main__":
+    print(DEPRECATION_POINTER, file=sys.stderr)
     main()

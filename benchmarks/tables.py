@@ -4,83 +4,45 @@ One function per table; each runs the Track-A simulator over the paper's
 workload suite (CNN/RNN/Transformer) for all four configurations and
 prints simulated-vs-published rows plus the qualitative trend verdict.
 
-Independent (config, workload) cells are farmed out across processes
-(``run(..., processes=N)``), and the engine-throughput benchmark writes
-machine-readable ``BENCH_sim.json`` so the perf trajectory accumulates
-across PRs.
+Since PR 5 the execution path is owned by the ``repro.api`` Runner (the
+same process-parallel path behind ``python -m repro table``);
+``run_suite_parallel`` and ``bench_engines`` remain as thin delegates so
+existing imports keep working.  Canonical metric column names come from
+``repro.api.schema``.
 """
 
 from __future__ import annotations
 
-import json
-import os
 import time
-from pathlib import Path
-from typing import Dict, List, Optional
+from typing import Dict, Optional
 
-from repro.core.calibration import (aggregate_rows, compare_to_paper,
-                                    trend_ok)
+from repro.api.bench import BENCH_CANONICAL_SCALE, BENCH_PATH  # noqa: F401
+from repro.api.bench import bench_engines  # noqa: F401  (re-export)
+from repro.api.schema import AGG_COLUMNS, LADDER
+from repro.core.calibration import report_vs_paper
 from repro.core.presets import CONFIGS, PAPER_TABLE
-from repro.core.simulator import HierarchySim
-from repro.core import trace as trace_mod
-
-BENCH_PATH = Path(__file__).resolve().parents[1] / "BENCH_sim.json"
-#: the ISSUE's acceptance criterion is measured at this scale; ad-hoc
-#: scales print but never overwrite the canonical artifact
-BENCH_CANONICAL_SCALE = 0.05
-
-
-def _workload_cells(args):
-    """All four config cells for one workload — top-level so it pickles.
-
-    One worker per workload: the (identical) trace is generated once
-    and reused across configs instead of once per cell.
-    """
-    wl_name, scale, engine = args
-    tr = trace_mod.WORKLOADS[wl_name](scale=scale)
-    out = []
-    for sp in CONFIGS:
-        t0 = time.perf_counter()
-        metrics = HierarchySim(sp, engine=engine).run(tr)
-        dt = time.perf_counter() - t0
-        out.append((sp.name, wl_name, metrics.row(),
-                    len(tr["core"]) / max(dt, 1e-9)))
-    return out
 
 
 def run_suite_parallel(scale: float = 1.0, engine: str = "soa",
                        processes: Optional[int] = None) -> Dict[str, Dict]:
-    """run_suite with independent workloads fanned out over processes.
+    """The paper suite over all four presets via the shared Runner.
 
     Cell results are deterministic (the SoA engine is bit-identical to
     the reference), so parallel and serial runs produce the same table.
     """
-    tasks = [(wl, scale, engine) for wl in trace_mod.WORKLOADS]
-    processes = processes if processes is not None else min(
-        len(tasks), os.cpu_count() or 1)
-    if processes > 1:
-        import multiprocessing as mp
-        # spawn keeps workers from inheriting jax/XLA state
-        with mp.get_context("spawn").Pool(processes) as pool:
-            results = pool.map(_workload_cells, tasks)
-    else:
-        results = [_workload_cells(t) for t in tasks]
-    by_cfg: Dict[str, List] = {}
-    rates: Dict[str, List] = {}
-    for batch in results:
-        for cfg_name, wl_name, row, rate in batch:
-            by_cfg.setdefault(cfg_name, []).append(row)
-            rates.setdefault(cfg_name, []).append((wl_name, rate))
+    from repro.api.runner import Runner
+    results = Runner(processes=processes).run_configs(
+        CONFIGS, scale=scale, engine=engine)
     out: Dict[str, Dict] = {}
-    for sp in CONFIGS:
-        out[sp.name] = aggregate_rows(by_cfg[sp.name])
-        out[sp.name]["accesses_per_sec"] = dict(rates[sp.name])
+    for res in results:
+        out[res["name"]] = dict(res["aggregate"])
+        out[res["name"]]["accesses_per_sec"] = res["accesses_per_sec"]
     return out
 
 
 def _rows(results, metrics):
     print(f"{'config':14s} " + "".join(f"{m:>26s}" for m in metrics))
-    for cfg in ("baseline", "shared_l3", "prefetch", "tensor_aware"):
+    for cfg in LADDER:
         cells = []
         for m in metrics:
             sim = results[cfg][m]
@@ -91,74 +53,17 @@ def _rows(results, metrics):
 
 def table1_latency_bandwidth(results: Dict) -> None:
     print("\n== Table I: latency / bandwidth ==")
-    _rows(results, ["latency_ns", "bandwidth_gbps"])
+    _rows(results, list(AGG_COLUMNS[:2]))
 
 
 def table2_hit_rate(results: Dict) -> None:
     print("\n== Table II: cache hit rate ==")
-    _rows(results, ["hit_rate"])
+    _rows(results, [AGG_COLUMNS[2]])
 
 
 def table3_energy(results: Dict) -> None:
     print("\n== Table III: energy per operation ==")
-    _rows(results, ["energy_uj"])
-
-
-def bench_engines(scale: float = 0.05, workload: str = "cnn",
-                  save: bool = True, repeats: int = 2) -> List[Dict]:
-    """Measure reference vs SoA engine throughput per preset and write
-    ``BENCH_sim.json`` (the ISSUE's ≥10× acceptance artifact).
-
-    Best-of-``repeats`` per cell: wall times on small shared boxes vary
-    ~2×, and min-of-N is the standard de-noising for throughput."""
-    tr = trace_mod.WORKLOADS[workload](scale=scale)
-    n = len(tr["core"])
-    records: List[Dict] = []
-    tot = {"object": 0.0, "soa": 0.0}
-    for sp in CONFIGS:
-        for engine in ("object", "soa"):
-            dt = float("inf")
-            native = False
-            for _ in range(max(1, repeats)):
-                sim = HierarchySim(sp, engine=engine)
-                t0 = time.perf_counter()
-                sim.run(tr)
-                dt = min(dt, time.perf_counter() - t0)
-                # distinguishes the compiled kernel from the pure-Python
-                # SoA fallback in the perf record
-                native = getattr(sim, "_native_counts", None) is not None
-            tot[engine] += dt
-            records.append({
-                "name": f"sim_{engine}",
-                "engine": engine,
-                "native": native,
-                "config": sp.name,
-                "workload": workload,
-                "scale": scale,
-                "accesses": n,
-                "accesses_per_sec": round(n / dt, 1),
-            })
-    agg = {
-        "name": "sim_engine_speedup",
-        "workload": workload,
-        "scale": scale,
-        "config": "aggregate(4 presets)",
-        "accesses_per_sec": round(4 * n / tot["soa"], 1),
-        "reference_accesses_per_sec": round(4 * n / tot["object"], 1),
-        "speedup": round(tot["object"] / tot["soa"], 2),
-    }
-    records.append(agg)
-    for r in records:
-        line = ",".join(f"{k}={v}" for k, v in r.items())
-        print(f"  bench,{line}")
-    if save and scale == BENCH_CANONICAL_SCALE and workload == "cnn":
-        BENCH_PATH.write_text(json.dumps(records, indent=1))
-        print(f"[bench] wrote {BENCH_PATH}")
-    elif save:
-        print(f"[bench] non-canonical cell (scale={scale}, "
-              f"workload={workload}); {BENCH_PATH.name} not overwritten "
-              f"(canonical: scale={BENCH_CANONICAL_SCALE}, cnn)")
-    return records
+    _rows(results, [AGG_COLUMNS[3]])
 
 
 def run(scale: float = 1.0, engine: str = "soa",
@@ -169,26 +74,10 @@ def run(scale: float = 1.0, engine: str = "soa",
     table1_latency_bandwidth(results)
     table2_hit_rate(results)
     table3_energy(results)
-    ok = trend_ok(results)
-    print(f"\nmonotone trend (all 4 metrics, all rows): {ok}")
-    # the paper's headline claim is a hard invariant at full scale: each
-    # technique strictly improves all four metrics (the tensor_aware
-    # hit-rate dip that used to break this was fixed by the repro.sweep
-    # retune — see presets.py / artifacts/sweep/).  Tiny smoke scales
-    # are out of the calibrated regime and only print the verdict.
-    if scale >= 1.0:
-        assert ok, ("trend_ok regression at full scale: " + "; ".join(
-            f"{c}={{'{m}': {results[c][m]:.4f}}}"
-            for c in ("baseline", "shared_l3", "prefetch", "tensor_aware")
-            for m in ("latency_ns", "bandwidth_gbps", "hit_rate",
-                      "energy_uj")))
-    rel = [abs(r["rel_err"]) for r in compare_to_paper(results)]
-    print(f"mean |rel err| vs paper: {sum(rel)/len(rel):.3f} "
-          f"(n={len(rel)} cells)  [{time.time()-t0:.0f}s @ scale={scale}, "
-          f"engine={engine}]")
-    for r in compare_to_paper(results):
-        print(f"  table,{r['config']},{r['metric']},{r['paper']},"
-              f"{r['simulated']},{r['rel_err']}")
+    # trend verdict + full-scale hard gate + paper comparison: the one
+    # shared definition (also behind `python -m repro table`)
+    report_vs_paper(results, scale, engine=engine,
+                    elapsed_s=time.time() - t0)
     print("\n== engine throughput (reference vs soa) ==")
     bench_engines(scale=bench_scale)
     return results

@@ -1,11 +1,12 @@
 """Inspect one dry-run cell: lower an (arch × shape) onto the 256-chip
-production mesh and print its roofline terms + collective schedule.
+production mesh and print its roofline terms + collective schedule,
+through the ``repro.api`` front door.
 
 Run:  PYTHONPATH=src python examples/dryrun_cell.py --arch zamba2-2.7b \
           --shape prefill_32k
 
-(This example re-executes the lowering; launch/dryrun.py caches the
-whole 40-cell matrix under artifacts/dryrun/.)
+(This example re-executes the lowering; ``python -m repro dryrun``
+caches the whole matrix under artifacts/dryrun/ as ArtifactV1 cells.)
 """
 
 import argparse
@@ -18,11 +19,12 @@ def main() -> None:
     ap.add_argument("--multi-pod", action="store_true")
     args = ap.parse_args()
 
-    # the dryrun module sets XLA_FLAGS before importing jax — import it
-    # FIRST so this process sees the 512 placeholder devices
-    from repro.launch.dryrun import run_cell
+    # repro.api.dryrun_cell imports the dryrun module before jax, so
+    # this process sees the 512 placeholder devices — no ordering to
+    # get wrong here
+    from repro.api import dryrun_cell
 
-    rec = run_cell(args.arch, args.shape, args.multi_pod, save=False)
+    rec = dryrun_cell(args.arch, args.shape, args.multi_pod)
     if rec["status"] != "ok":
         raise SystemExit(f"cell failed: {rec}")
     print("\ncollective schedule (per device, executed):")

@@ -1,16 +1,18 @@
-"""HERMES simulator walk-through: reproduce one paper figure end to end.
+"""HERMES simulator walk-through: reproduce one paper figure end to end
+through the ``repro.api`` front door.
 
-Runs the four paper configurations over the three workload classes and
-prints the Table-I/II/III style comparison — the faithful-reproduction
-demo (benchmarks/tables.py runs the full-scale version).
+Declares one :class:`Experiment` (the paper's four-configuration ladder
+× three workload classes), executes it on the shared :class:`Runner`,
+and prints the Table-I/II/III style comparison from the returned
+ArtifactV1.  ``python -m repro table`` runs the full-scale version.
 
 Run:  PYTHONPATH=src python examples/hermes_sim.py [--scale 0.25]
 """
 
 import argparse
 
-from repro.core import CONFIGS
-from repro.core.calibration import compare_to_paper, run_suite, trend_ok
+from repro.api import (AGG_COLUMNS, Experiment, Runner, compare_to_paper,
+                       trend_ok, validate_artifact)
 
 
 def main() -> None:
@@ -18,19 +20,22 @@ def main() -> None:
     ap.add_argument("--scale", type=float, default=0.25)
     args = ap.parse_args()
 
-    print(f"[hermes_sim] simulating {len(CONFIGS)} configurations × 3 "
-          f"workloads @ scale={args.scale} ...")
-    results = run_suite(scale=args.scale)
+    exp = Experiment(name=f"walkthrough_scale{args.scale:g}",
+                     scale=args.scale)   # default: full ladder × suite
+    print(f"[hermes_sim] simulating {len(exp.hierarchies)} configurations "
+          f"× {len(exp.workloads)} workloads @ scale={exp.scale} ...")
+    artifact = validate_artifact(Runner().run(exp, tool="hermes_sim.py"))
+    results = artifact["result"]["aggregates"]
+
     print(f"\n{'config':14s} {'lat(ns)':>8s} {'bw(GB/s)':>9s} "
           f"{'hit':>6s} {'µJ/op':>7s}")
-    for cfg in ("baseline", "shared_l3", "prefetch", "tensor_aware"):
-        r = results[cfg]
-        print(f"{cfg:14s} {r['latency_ns']:8.1f} {r['bandwidth_gbps']:9.1f}"
-              f" {r['hit_rate']:6.3f} {r['energy_uj']:7.1f}")
+    for cfg, r in results.items():
+        print(f"{cfg:14s} {r[AGG_COLUMNS[0]]:8.1f} {r[AGG_COLUMNS[1]]:9.1f}"
+              f" {r[AGG_COLUMNS[2]]:6.3f} {r[AGG_COLUMNS[3]]:7.1f}")
     print(f"\nqualitative trend (technique stack helps everywhere): "
           f"{trend_ok(results)}")
     print("per-cell deltas vs the published tables "
-          "(full scale in benchmarks/run.py):")
+          "(full scale: python -m repro table):")
     for row in compare_to_paper(results):
         print(f"  {row['config']:13s} {row['metric']:15s} "
               f"paper={row['paper']:<7} sim={row['simulated']:<8} "

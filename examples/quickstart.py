@@ -1,6 +1,8 @@
 """Quickstart: the three layers of the repo in ~60 seconds on CPU.
 
-  1. Track A — run the paper's memory-hierarchy simulator (one config).
+  1. Track A — one declarative ``repro.api`` Experiment over the
+     paper's memory-hierarchy simulator (the ``python -m repro table``
+     front door, programmatically).
   2. Track B — train a reduced LM for 30 steps (loss decreases).
   3. Kernels — Pallas flash-attention vs its oracle (interpret mode).
 
@@ -11,14 +13,18 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-# --- 1. the paper's simulator ------------------------------------------------
-from repro.core import TENSOR_AWARE, simulate
-from repro.core.trace import transformer_trace
+# --- 1. the paper's simulator (via the repro.api front door) -----------------
+from repro.api import Experiment, HierarchySpec, Runner
 
 print("== Track A: HERMES simulator (transformer workload) ==")
-m = simulate(TENSOR_AWARE, transformer_trace(scale=0.1))
-print(f"latency {m.avg_latency_ns:.1f} ns | bandwidth {m.bandwidth_gbps:.1f}"
-      f" GB/s | hit {m.hit_rate:.2%} | energy {m.energy_uj_per_op:.1f} µJ/op")
+exp = Experiment(name="quickstart",
+                 hierarchies=(HierarchySpec.from_preset("tensor_aware"),),
+                 workloads=("transformer",), scale=0.1, processes=1)
+art = Runner().run(exp, tool="quickstart.py")
+r = art["result"]["aggregates"]["tensor_aware"]
+print(f"latency {r['latency_ns']:.1f} ns | bandwidth "
+      f"{r['bandwidth_gbps']:.1f} GB/s | hit {r['hit_rate']:.2%} | "
+      f"energy {r['energy_uj']:.1f} µJ/op")
 
 # --- 2. train a reduced arch --------------------------------------------------
 from repro.configs.base import RunConfig

@@ -1,0 +1,75 @@
+"""``repro.api`` — the typed front door over sim, sweep, plan, launch.
+
+One declarative :class:`Experiment` spec (workloads × hierarchies ×
+engine × scale × outputs), one :class:`Runner` execute path, one
+versioned :mod:`~repro.api.schema` (ArtifactV1) — exposed on the CLI as
+``python -m repro``.
+
+Exports resolve lazily (PEP 562) so that leaf modules like
+``repro.api.schema`` stay importable from ``repro.core`` without
+circular imports, and so that importing ``repro.api`` never drags in
+jax (the launch helpers import it on first use).
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+_EXPORTS = {
+    # spec layer
+    "Experiment": "repro.api.spec",
+    "HierarchySpec": "repro.api.spec",
+    "SpecError": "repro.api.spec",
+    "ladder_specs": "repro.api.spec",
+    # runner
+    "Runner": "repro.api.runner",
+    "RunnerError": "repro.api.runner",
+    # schema
+    "ArtifactError": "repro.api.schema",
+    "artifact_v1": "repro.api.schema",
+    "validate_artifact": "repro.api.schema",
+    "load_record": "repro.api.schema",
+    "AGG_COLUMNS": "repro.api.schema",
+    "LADDER": "repro.api.schema",
+    # registry
+    "PRESETS": "repro.api.registry",
+    "WORKLOAD_NAMES": "repro.api.registry",
+    "SWEEP_GRIDS": "repro.api.registry",
+    "parse_set": "repro.api.registry",
+    # bench
+    "bench_engines": "repro.api.bench",
+    # calibration front door (paper-table comparison + trend verdict)
+    "aggregate_rows": "repro.core.calibration",
+    "compare_to_paper": "repro.core.calibration",
+    "trend_ok": "repro.core.calibration",
+}
+
+__all__ = sorted(_EXPORTS) + ["dryrun_cell", "plan_cell"]
+
+
+def __getattr__(name: str) -> Any:
+    if name in _EXPORTS:
+        import importlib
+        return getattr(importlib.import_module(_EXPORTS[name]), name)
+    raise AttributeError(f"module 'repro.api' has no attribute {name!r}")
+
+
+def dryrun_cell(arch: str, shape: str, multi_pod: bool = False,
+                save: bool = False, **kw: Any) -> dict:
+    """Lower + compile one (arch × shape × mesh) cell and return its
+    record (roofline terms, collectives, memory analysis).
+
+    Typed wrapper over ``repro.launch.dryrun.run_cell``; importing the
+    dryrun module FIRST sets the 512-device XLA host platform before
+    jax initializes, so callers don't have to know about that ordering.
+    """
+    from repro.launch.dryrun import run_cell
+    return run_cell(arch, shape, multi_pod, save=save, **kw)
+
+
+def plan_cell(arch: str, shape: str, multi_pod: bool = False,
+              save: bool = False, **kw: Any) -> dict:
+    """Run the capacity-planner mitigation ladder for one cell (see
+    ``repro.plan``); returns the record with its ``plan`` section."""
+    from repro.launch.dryrun import plan_cell_pass
+    return plan_cell_pass(arch, shape, multi_pod, save=save, **kw)

@@ -1,0 +1,78 @@
+"""Preset / workload / sweep-grid registry + ``--set k=v`` parsing.
+
+Everything the ``python -m repro`` CLI resolves by string lives here:
+
+* :data:`PRESETS` — the four paper hierarchy presets (re-exported from
+  ``core.presets`` so the registry is the one lookup point);
+* :data:`WORKLOAD_NAMES` — the trace-generator registry's keys;
+* :data:`SWEEP_GRIDS` — the named design-space grids (full / smoke /
+  stream_rank) formerly private to ``benchmarks/sweep.py``;
+* :func:`parse_set` — ``--set prefetch.degree=3`` → ``{path: value}``,
+  with JSON-literal value parsing (so ``--set l2.policy=lru`` and
+  ``--set ta.low_utility=0.2`` both do the obvious thing).
+"""
+
+from __future__ import annotations
+
+import json
+from typing import Any, Dict, Iterable, Mapping, Sequence
+
+from repro.core import trace as trace_mod
+from repro.core.presets import PRESETS  # noqa: F401  (re-export)
+from repro.api.spec import SpecError
+
+WORKLOAD_NAMES = tuple(trace_mod.WORKLOADS)
+
+#: full retuning grid: the axes that measurably move full-scale metrics
+#: (prefetch aggressiveness, which levels run the TA policy) plus the TA
+#: policy knobs that define its local design space.
+FULL_AXES = {
+    "prefetch.degree": [2, 3],
+    "prefetch.stride_confidence": [3, 5],
+    "l2.policy": ["lru", "tensor_aware"],
+    "ta.low_utility": [0.05, 0.2],
+    "ta.prefetch_rank": [2.5, 3.5],
+    "ta.stream_rank": [0.0, 1.5],
+}
+
+#: focused grid for the TA-vs-prefetch hit-margin question: how should
+#: STREAMING-class lines rank against dead/cold resident tensors at the
+#: shared L3?
+STREAM_RANK_AXES = {
+    "ta.stream_rank": [0.0, 0.5, 1.5, 2.0],
+    "ta.low_utility": [0.05, 0.2],
+}
+
+#: CI-sized grid: 8 ladders, still spanning every axis kind
+SMOKE_AXES = {
+    "prefetch.degree": [2, 3],
+    "l2.policy": ["lru", "tensor_aware"],
+    "ta.prefetch_rank": [2.5, 3.5],
+}
+
+SWEEP_GRIDS: Dict[str, Dict[str, list]] = {
+    "full": FULL_AXES,
+    "smoke": SMOKE_AXES,
+    "stream_rank": STREAM_RANK_AXES,
+}
+
+
+def parse_value(text: str) -> Any:
+    """JSON literal if it parses, bare string otherwise."""
+    try:
+        return json.loads(text)
+    except json.JSONDecodeError:
+        return text
+
+
+def parse_set(items: Sequence[str]) -> Dict[str, Any]:
+    """``["prefetch.degree=3", "l2.policy=lru"]`` → override dict."""
+    out: Dict[str, Any] = {}
+    for item in items or ():
+        path, sep, value = item.partition("=")
+        if not sep or not path:
+            raise SpecError(f"--set expects path=value, got {item!r}")
+        if path in out:
+            raise SpecError(f"--set path {path!r} given twice")
+        out[path] = parse_value(value)
+    return out

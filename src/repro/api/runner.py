@@ -1,0 +1,255 @@
+"""The one process-parallel execute path for simulator experiments.
+
+Before PR 5 every entry point (``benchmarks.tables``,
+``benchmarks.sweep``, the examples) hand-rolled its own spawn pool,
+config dedup, and result reshaping.  :class:`Runner` owns that path
+once:
+
+* **cell dedup** — configs are deduplicated by value (frozen
+  dataclasses hash), so ladder sweeps sharing rows never re-simulate;
+* **process parallelism** — (workload × config-chunk) tasks over a
+  spawn pool (spawn keeps workers from inheriting jax/XLA state); each
+  worker generates its workload trace once and reuses it across its
+  chunk's configs;
+* **native-kernel detection** — whether the compiled ctypes kernel (vs
+  the pure-Python SoA fallback) served the run is recorded in artifact
+  provenance;
+* **failure isolation** — a crashing cell is reported as
+  ``(config, workload, error)`` instead of taking the whole pool down;
+* **progress** — one line per completed task when ``progress=True``.
+
+``Runner.run(experiment)`` returns (and optionally writes) a validated
+ArtifactV1; ``Runner.run_configs`` is the lower-level primitive the
+legacy entry points delegate to; ``Runner.map`` is the serial
+failure-isolated map the dry-run/plan matrix loops share.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import sys
+import time
+from pathlib import Path
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+from repro.api import schema as schema_mod
+from repro.api.spec import Experiment
+from repro.core import trace as trace_mod
+from repro.core.params import SystemParams
+
+
+class RunnerError(RuntimeError):
+    """One or more cells failed; the message lists every failing cell."""
+
+
+def _cells_worker(args: Tuple) -> List[Tuple]:
+    """One pool task: all configs of one chunk on one workload.
+
+    Top-level so it pickles under the spawn start method.  Never raises:
+    a failing cell yields an ``("error", …)`` entry instead.  Returns
+    ``[(config_index, workload, status, payload, rate, native_used)]``.
+    """
+    from repro.core.simulator import HierarchySim
+
+    wl_name, scale, engine, native, indexed_cfgs = args
+    tr = trace_mod.WORKLOADS[wl_name](scale=scale)
+    n = len(tr["core"])
+    out = []
+    for idx, sp in indexed_cfgs:
+        try:
+            sim = HierarchySim(sp, engine=engine)
+            if not native:
+                sim.native = False
+            t0 = time.perf_counter()
+            metrics = sim.run(tr)
+            dt = time.perf_counter() - t0
+            native_used = getattr(sim, "_native_counts", None) is not None
+            out.append((idx, wl_name, "ok", metrics.row(),
+                        n / max(dt, 1e-9), native_used))
+        except Exception as e:  # noqa: BLE001 — isolate the cell
+            out.append((idx, wl_name, "error",
+                        f"{type(e).__name__}: {e}", 0.0, False))
+    return out
+
+
+class Runner:
+    """Owns the single execute path over the HERMES simulator."""
+
+    def __init__(self, processes: Optional[int] = None,
+                 progress: bool = False):
+        self.processes = processes
+        self.progress = progress
+
+    # -- the parallel primitive ----------------------------------------
+    def run_configs(self, configs: Sequence[SystemParams],
+                    workloads: Optional[Sequence[str]] = None,
+                    scale: float = 1.0, engine: str = "soa",
+                    native: bool = True, strict: bool = True,
+                    processes: Optional[int] = None,
+                    ) -> List[Dict[str, Any]]:
+        """Run every config over the workload suite.
+
+        Returns, in input order (duplicated configs share one
+        simulation)::
+
+            {"name": …, "aggregate": {latency_ns, bandwidth_gbps,
+             hit_rate, energy_uj, per_workload}, "rows": {workload: row},
+             "accesses_per_sec": {workload: rate}, "native": bool}
+
+        With ``strict=True`` (default) any failed cell raises
+        :class:`RunnerError` naming every failure; with ``strict=False``
+        failures land in an ``"errors"`` entry per result.
+        """
+        from repro.core.calibration import aggregate_rows
+
+        wls = list(workloads) if workloads is not None \
+            else list(trace_mod.WORKLOADS)
+        # -- dedup by value: identical configs simulate once -----------
+        uniq: List[SystemParams] = []
+        uidx: Dict[SystemParams, int] = {}
+        alias: List[int] = []
+        for sp in configs:
+            if sp not in uidx:
+                uidx[sp] = len(uniq)
+                uniq.append(sp)
+            alias.append(uidx[sp])
+        indexed = list(enumerate(uniq))
+
+        if processes is None:
+            processes = self.processes
+        if processes is None:
+            processes = min(len(wls) * max(1, len(indexed) // 4) or 1,
+                            os.cpu_count() or 1)
+        per_wl = max(1, (processes + len(wls) - 1) // len(wls))
+        csize = max(1, (len(indexed) + per_wl - 1) // per_wl)
+        chunks = [indexed[i:i + csize]
+                  for i in range(0, len(indexed), csize)]
+        tasks = [(wl, scale, engine, native, chunk)
+                 for wl in wls for chunk in chunks]
+
+        if processes > 1 and len(tasks) > 1:
+            import multiprocessing as mp
+            # spawn keeps workers from inheriting jax/XLA state
+            with mp.get_context("spawn").Pool(processes) as pool:
+                it = pool.imap_unordered(_cells_worker, tasks)
+                results = self._collect(it, len(tasks))
+        else:
+            results = self._collect(map(_cells_worker, tasks), len(tasks))
+
+        rows: Dict[int, Dict[str, Dict]] = {i: {} for i, _ in indexed}
+        rates: Dict[int, Dict[str, float]] = {i: {} for i, _ in indexed}
+        errors: Dict[int, Dict[str, str]] = {i: {} for i, _ in indexed}
+        native_used: Dict[int, bool] = {i: True for i, _ in indexed}
+        for batch in results:
+            for idx, wl_name, status, payload, rate, nat in batch:
+                if status == "ok":
+                    rows[idx][wl_name] = payload
+                    rates[idx][wl_name] = round(rate, 1)
+                    native_used[idx] = native_used[idx] and nat
+                else:
+                    errors[idx][wl_name] = payload
+        failures = [f"{uniq[i].name} × {wl}: {msg}"
+                    for i in range(len(uniq))
+                    for wl, msg in errors[i].items()]
+        if failures and strict:
+            raise RunnerError(f"{len(failures)} cell(s) failed:\n  "
+                              + "\n  ".join(failures))
+
+        out = []
+        for ui in alias:
+            sp = uniq[ui]
+            # aggregate in canonical workload order
+            ordered = [rows[ui][wl] for wl in wls if wl in rows[ui]]
+            res: Dict[str, Any] = {
+                "name": sp.name,
+                "aggregate": aggregate_rows(ordered) if ordered else {},
+                "rows": {wl: rows[ui][wl] for wl in wls
+                         if wl in rows[ui]},
+                "accesses_per_sec": rates[ui],
+                "native": native_used[ui],
+            }
+            if errors[ui]:
+                res["errors"] = dict(errors[ui])
+            out.append(res)
+        return out
+
+    def _collect(self, iterator, n_tasks: int) -> List:
+        results = []
+        for batch in iterator:
+            results.append(batch)
+            if self.progress:
+                print(f"[runner] {len(results)}/{n_tasks} tasks done",
+                      file=sys.stderr)
+        return results
+
+    # -- the experiment front door -------------------------------------
+    def run(self, exp: Experiment, kind: str = "table",
+            tool: str = "repro.api") -> Dict[str, Any]:
+        """Execute an Experiment; returns a validated ArtifactV1.
+
+        When ``exp.out_dir`` is set the artifact is also written there
+        as ``<kind>_<experiment name>.json``.
+        """
+        t0 = time.time()
+        configs = exp.build_configs()
+        # the spec's parallelism applies unless the Runner was
+        # constructed with an explicit override
+        procs = self.processes if self.processes is not None \
+            else exp.processes
+        results = self.run_configs(configs, workloads=exp.workloads,
+                                   scale=exp.scale, engine=exp.engine,
+                                   native=exp.native, processes=procs)
+        rows = [res["rows"][wl]
+                for res in results for wl in exp.workloads]
+        aggregates = {
+            res["name"]: {k: v for k, v in res["aggregate"].items()
+                          if k != "per_workload"}
+            for res in results}
+        result = {
+            "aggregates": aggregates,
+            "accesses_per_sec": {res["name"]: res["accesses_per_sec"]
+                                 for res in results},
+        }
+        provenance = {
+            "tool": tool,
+            "engine": exp.engine,
+            "native_kernel": all(res["native"] for res in results),
+            "python": sys.version.split()[0],
+            "wall_s": round(time.time() - t0, 2),
+            "created_unix": int(time.time()),
+        }
+        art = schema_mod.artifact_v1(kind, exp.as_dict(), rows,
+                                     result=result, provenance=provenance)
+        if exp.out_dir is not None:
+            path = Path(exp.out_dir) / f"{kind}_{exp.name}.json"
+            path.parent.mkdir(parents=True, exist_ok=True)
+            path.write_text(json.dumps(art, indent=1))
+            art["result"]["artifact_path"] = str(path)
+        return art
+
+    # -- serial failure-isolated map (dry-run / plan matrix loops) -----
+    def map(self, fn: Callable[..., Dict[str, Any]],
+            items: Sequence[Tuple], label: str = "cells",
+            ) -> List[Dict[str, Any]]:
+        """Apply ``fn(*item)`` serially with failure isolation.
+
+        Cells that must share one process (jax lowering against the
+        512-device host platform) cannot fan out; this gives them the
+        Runner's progress + isolation semantics.  Returns one
+        ``{"status": "ok", "value": …}`` or ``{"status": "error",
+        "item": …, "error": …}`` per item.
+        """
+        out = []
+        for i, item in enumerate(items):
+            try:
+                out.append({"status": "ok", "value": fn(*item)})
+            except Exception as e:  # noqa: BLE001 — isolate the cell
+                out.append({"status": "error", "item": repr(item),
+                            "error": f"{type(e).__name__}: {e}"})
+                print(f"[runner] {label} {i + 1}/{len(items)} FAILED: "
+                      f"{type(e).__name__}: {e}", file=sys.stderr)
+            if self.progress:
+                print(f"[runner] {label} {i + 1}/{len(items)} done",
+                      file=sys.stderr)
+        return out

@@ -1,0 +1,215 @@
+"""Canonical metric columns + the versioned ``ArtifactV1`` envelope.
+
+Single source of truth for the names every layer used to hard-code:
+
+* :data:`METRIC_ROW_KEYS` — the per-cell ``Metrics.row()`` columns,
+  derived from the ``Metrics`` dataclass itself so they can never drift;
+* :data:`AGG_COLUMNS` / :data:`AGG_SOURCES` / :data:`METRIC_SENSE` — the
+  paper's four Table I–III aggregate metrics, their per-cell source
+  fields, and their optimization sense (consumed by
+  ``core.calibration``, ``benchmarks.tables``, ``sweep.pareto``);
+* :data:`LADDER` — the cumulative four-row configuration ladder;
+* :data:`ROOFLINE_TERMS` + the TPU-v5e hardware constants shared by
+  ``launch.dryrun`` and ``benchmarks.roofline``.
+
+Every artifact the ``python -m repro`` front door writes under
+``artifacts/`` is an **ArtifactV1** envelope::
+
+    {
+      "schema": "repro.artifact.v1",
+      "kind": "table" | "sweep" | "bench" | "plan" | "dryrun_cell",
+      "spec": {...},            # the experiment/cell spec, JSON-able
+      "spec_hash": "sha256:…",  # canonical-JSON hash of "spec"
+      "provenance": {"tool": ..., "wall_s": ..., ...},
+      "columns": [...],         # AGG_COLUMNS, for row-shaped kinds
+      "rows": [...],            # kind-specific metric rows
+      "result": {...}           # kind-specific payload (aggregates,
+    }                           # Pareto front, plan verdicts, …)
+
+:func:`validate_artifact` checks the envelope plus the kind-specific row
+shape; :func:`load_record` reads a cell artifact that may be either a V1
+envelope or a pre-PR-5 bare record (the committed dry-run matrix), so
+readers handle both generations uniformly.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import math
+from pathlib import Path
+from typing import Any, Dict, Mapping, Optional, Sequence
+
+from repro.core.simulator import Metrics
+
+SCHEMA_V1 = "repro.artifact.v1"
+
+#: artifact kinds the front door emits
+KINDS = ("table", "sweep", "bench", "plan", "dryrun_cell")
+
+#: per-cell Metrics.row() columns — derived, not re-typed
+METRIC_ROW_KEYS = tuple(f.name for f in dataclasses.fields(Metrics))
+
+#: the paper's four aggregate metrics (Tables I–III), canonical order
+AGG_COLUMNS = ("latency_ns", "bandwidth_gbps", "hit_rate", "energy_uj")
+
+#: aggregate column → the Metrics.row() field it averages over workloads
+AGG_SOURCES = {
+    "latency_ns": "avg_latency_ns",
+    "bandwidth_gbps": "bandwidth_gbps",
+    "hit_rate": "hit_rate",
+    "energy_uj": "energy_uj_per_op",
+}
+
+#: optimization sense per aggregate column: +1 maximize, -1 minimize
+METRIC_SENSE = {
+    "latency_ns": -1,
+    "bandwidth_gbps": +1,
+    "hit_rate": +1,
+    "energy_uj": -1,
+}
+
+#: the cumulative four-row configuration ladder (presets.CONFIGS order)
+LADDER = ("baseline", "shared_l3", "prefetch", "tensor_aware")
+
+#: roofline term keys shared by launch.dryrun (writer) and
+#: benchmarks.roofline (reader)
+ROOFLINE_TERMS = ("compute_s", "memory_s", "collective_s")
+
+#: TPU v5e per-chip hardware constants (DESIGN §7)
+V5E_PEAK_FLOPS = 197e12   # bf16 FLOP/s
+V5E_HBM_BW = 819e9        # bytes/s HBM
+V5E_ICI_BW = 50e9         # bytes/s per ICI link
+
+assert set(AGG_SOURCES) == set(AGG_COLUMNS) == set(METRIC_SENSE)
+assert all(v in METRIC_ROW_KEYS for v in AGG_SOURCES.values())
+
+
+class ArtifactError(ValueError):
+    """An artifact does not conform to the ArtifactV1 schema."""
+
+
+def spec_hash(spec: Mapping[str, Any]) -> str:
+    """Canonical-JSON sha256 of a spec dict (order-insensitive)."""
+    blob = json.dumps(spec, sort_keys=True, separators=(",", ":"),
+                      default=str)
+    return "sha256:" + hashlib.sha256(blob.encode()).hexdigest()
+
+
+def artifact_v1(kind: str, spec: Mapping[str, Any],
+                rows: Sequence[Mapping[str, Any]],
+                result: Optional[Mapping[str, Any]] = None,
+                provenance: Optional[Mapping[str, Any]] = None,
+                ) -> Dict[str, Any]:
+    """Assemble (and validate) one ArtifactV1 envelope."""
+    art = {
+        "schema": SCHEMA_V1,
+        "kind": kind,
+        "spec": dict(spec),
+        "spec_hash": spec_hash(spec),
+        "provenance": dict(provenance or {}),
+        "columns": list(AGG_COLUMNS),
+        "rows": [dict(r) for r in rows],
+        "result": dict(result or {}),
+    }
+    art["provenance"].setdefault("tool", "repro.api")
+    art["provenance"].setdefault("wall_s", 0.0)
+    return validate_artifact(art)
+
+
+def _require(cond: bool, msg: str) -> None:
+    if not cond:
+        raise ArtifactError(msg)
+
+
+def _finite(row: Mapping[str, Any], keys: Sequence[str], where: str) -> None:
+    for k in keys:
+        _require(k in row, f"{where}: missing column {k!r}")
+        v = row[k]
+        if isinstance(v, bool) or not isinstance(v, (int, float)):
+            raise ArtifactError(f"{where}: column {k!r} is not numeric "
+                                f"({v!r})")
+        _require(math.isfinite(float(v)), f"{where}: column {k!r} is "
+                 f"not finite ({v!r})")
+
+
+def validate_artifact(art: Mapping[str, Any]) -> Dict[str, Any]:
+    """Validate one ArtifactV1 envelope; returns it (for chaining).
+
+    Raises :class:`ArtifactError` with a pin-pointed message otherwise.
+    """
+    _require(isinstance(art, Mapping), "artifact is not a mapping")
+    _require(art.get("schema") == SCHEMA_V1,
+             f"schema tag {art.get('schema')!r} != {SCHEMA_V1!r}")
+    kind = art.get("kind")
+    _require(kind in KINDS, f"unknown artifact kind {kind!r}")
+    spec = art.get("spec")
+    _require(isinstance(spec, Mapping), "spec is not a mapping")
+    _require(art.get("spec_hash") == spec_hash(spec),
+             "spec_hash does not match spec (artifact tampered or stale)")
+    prov = art.get("provenance")
+    _require(isinstance(prov, Mapping) and "tool" in prov,
+             "provenance.tool missing")
+    _require(art.get("columns") == list(AGG_COLUMNS),
+             f"columns {art.get('columns')!r} != canonical {AGG_COLUMNS}")
+    rows = art.get("rows")
+    _require(isinstance(rows, list)
+             and all(isinstance(r, Mapping) for r in rows),
+             "rows is not a list of mappings")
+    result = art.get("result")
+    _require(isinstance(result, Mapping), "result is not a mapping")
+
+    if kind == "table":
+        _require(len(rows) > 0, "table artifact has no rows")
+        for i, row in enumerate(rows):
+            for k in METRIC_ROW_KEYS:
+                _require(k in row, f"rows[{i}]: missing Metrics "
+                         f"column {k!r}")
+            _finite(row, [k for k in METRIC_ROW_KEYS
+                          if k not in ("name", "workload")], f"rows[{i}]")
+    elif kind == "sweep":
+        _require(len(rows) > 0, "sweep artifact has no rows")
+        for i, row in enumerate(rows):
+            _require("label" in row, f"rows[{i}]: missing point label")
+            _finite(row, AGG_COLUMNS, f"rows[{i}]")
+    elif kind == "bench":
+        _require(len(rows) > 0, "bench artifact has no rows")
+        for i, row in enumerate(rows):
+            _require("name" in row, f"rows[{i}]: missing bench name")
+    else:  # plan / dryrun_cell: the payload lives in result
+        _require(len(result) > 0, f"{kind} artifact has an empty result")
+    return dict(art)
+
+
+# ---------------------------------------------------------------------------
+# record I/O: V1 envelopes + pre-PR-5 bare records, uniformly
+# ---------------------------------------------------------------------------
+def wrap_record(kind: str, spec: Mapping[str, Any],
+                record: Mapping[str, Any],
+                tool: str = "repro.api") -> Dict[str, Any]:
+    """Wrap a bare cell/report record in an ArtifactV1 envelope."""
+    return artifact_v1(kind, spec, rows=[], result=record,
+                       provenance={"tool": tool})
+
+
+def unwrap_record(payload: Mapping[str, Any]) -> Dict[str, Any]:
+    """Return the bare record from a V1 envelope, or the payload itself
+    when it predates the envelope (pre-PR-5 artifacts)."""
+    if payload.get("schema") == SCHEMA_V1:
+        return dict(validate_artifact(payload)["result"])
+    return dict(payload)
+
+
+def load_record(path: Path) -> Dict[str, Any]:
+    """Read a JSON cell artifact, unwrapping the V1 envelope if present."""
+    return unwrap_record(json.loads(Path(path).read_text()))
+
+
+def dump_record(path: Path, kind: str, spec: Mapping[str, Any],
+                record: Mapping[str, Any], tool: str = "repro.api") -> None:
+    """Write a bare record as a V1 envelope (writer twin of load_record)."""
+    path = Path(path)
+    path.parent.mkdir(parents=True, exist_ok=True)
+    path.write_text(json.dumps(wrap_record(kind, spec, record, tool=tool),
+                               indent=1))

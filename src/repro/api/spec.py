@@ -1,0 +1,177 @@
+"""Typed, declarative experiment specs — the ``repro.api`` front door.
+
+An :class:`Experiment` is *workloads × hierarchies × engine × scale ×
+outputs*:
+
+* each :class:`HierarchySpec` names a preset from
+  ``repro.core.presets.PRESETS`` plus string-addressable overrides in
+  the ``repro.sweep.grid`` dotted-path language (``"prefetch.degree"``,
+  ``"l3.ta.prefetch_rank"``, ``"ta.low_utility"`` …) — subsuming the
+  ad-hoc ``SystemParams``/``CacheParams``/``TensorPolicyParams``
+  dataclass surgery the old entry points hand-rolled;
+* workloads name generators in ``repro.core.trace.WORKLOADS``;
+* everything is validated **at construction** (:class:`SpecError` with a
+  pin-pointed message), so a bad spec fails before any simulation runs.
+
+``Experiment.as_dict()`` is the JSON-able spec embedded (and hashed)
+into every ArtifactV1 the :class:`repro.api.runner.Runner` emits.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import math
+from typing import Any, Dict, List, Mapping, Optional, Sequence, Tuple
+
+from repro.core import trace as trace_mod
+from repro.core.params import SystemParams
+from repro.core.presets import PRESETS
+
+
+class SpecError(ValueError):
+    """An Experiment/HierarchySpec is invalid; message says exactly why."""
+
+
+def _freeze_overrides(overrides: Any) -> Tuple[Tuple[str, Any], ...]:
+    if isinstance(overrides, Mapping):
+        items = tuple(sorted(overrides.items()))
+    else:
+        items = tuple((str(k), v) for k, v in overrides)
+    for path, _ in items:
+        if not isinstance(path, str) or not path:
+            raise SpecError(f"override path must be a non-empty string, "
+                            f"got {path!r}")
+    return items
+
+
+@dataclasses.dataclass(frozen=True)
+class HierarchySpec:
+    """One memory-hierarchy configuration: preset + dotted overrides.
+
+    ``build()`` lowers the spec to a first-class ``SystemParams`` —
+    with no overrides it is bit-identical to ``PRESETS[preset]``.
+    """
+
+    name: str
+    preset: str = "baseline"
+    overrides: Tuple[Tuple[str, Any], ...] = ()
+
+    def __post_init__(self) -> None:
+        if not self.name or not isinstance(self.name, str):
+            raise SpecError(f"hierarchy name must be a non-empty string, "
+                            f"got {self.name!r}")
+        if self.preset not in PRESETS:
+            raise SpecError(f"unknown preset {self.preset!r} "
+                            f"(known: {sorted(PRESETS)})")
+        object.__setattr__(self, "overrides",
+                           _freeze_overrides(self.overrides))
+        self.build()          # fail fast on a bad override path/value
+
+    @classmethod
+    def from_preset(cls, preset: str, name: Optional[str] = None,
+                    overrides: Optional[Mapping[str, Any]] = None,
+                    ) -> "HierarchySpec":
+        return cls(name=name or preset, preset=preset,
+                   overrides=_freeze_overrides(overrides or {}))
+
+    def build(self) -> SystemParams:
+        """Lower to ``SystemParams`` (bit-identical to the preset when
+        there are no overrides)."""
+        base = PRESETS[self.preset]
+        if not self.overrides and self.name == base.name:
+            return base
+        # lazy: repro.sweep's package __init__ pulls in the sweep driver
+        from repro.sweep.grid import apply_point
+        try:
+            sp = apply_point(base, dict(self.overrides))
+        except (AttributeError, TypeError, ValueError) as e:
+            raise SpecError(
+                f"hierarchy {self.name!r}: cannot apply overrides "
+                f"{dict(self.overrides)!r} to preset {self.preset!r}: {e}"
+            ) from e
+        if sp.name != self.name:
+            sp = dataclasses.replace(sp, name=self.name)
+        return sp
+
+    def as_dict(self) -> Dict[str, Any]:
+        return {"name": self.name, "preset": self.preset,
+                "overrides": {k: v for k, v in self.overrides}}
+
+
+def ladder_specs(overrides: Optional[Mapping[str, Any]] = None,
+                 ) -> Tuple[HierarchySpec, ...]:
+    """The paper's cumulative four-row ladder as HierarchySpecs, with
+    optional shared overrides applied to every row."""
+    return tuple(HierarchySpec.from_preset(name, overrides=overrides)
+                 for name in PRESETS)
+
+
+@dataclasses.dataclass(frozen=True)
+class Experiment:
+    """One declarative experiment = workloads × hierarchies × engine ×
+    scale × outputs.  Fully validated at construction."""
+
+    name: str
+    hierarchies: Tuple[HierarchySpec, ...] = dataclasses.field(
+        default_factory=ladder_specs)
+    workloads: Tuple[str, ...] = tuple(trace_mod.WORKLOADS)
+    engine: str = "soa"
+    scale: float = 1.0
+    native: bool = True
+    processes: Optional[int] = None
+    #: artifact home (directory); None = caller handles persistence
+    out_dir: Optional[str] = None
+
+    def __post_init__(self) -> None:
+        if not self.name or not isinstance(self.name, str):
+            raise SpecError(f"experiment name must be a non-empty "
+                            f"string, got {self.name!r}")
+        hs = tuple(self.hierarchies)
+        if not hs:
+            raise SpecError("experiment needs at least one hierarchy")
+        for h in hs:
+            if not isinstance(h, HierarchySpec):
+                raise SpecError(f"hierarchies must be HierarchySpec, "
+                                f"got {type(h).__name__}")
+        names = [h.name for h in hs]
+        if len(set(names)) != len(names):
+            raise SpecError(f"hierarchy names must be unique, got {names}")
+        object.__setattr__(self, "hierarchies", hs)
+        wls = tuple(self.workloads)
+        if not wls:
+            raise SpecError("experiment needs at least one workload")
+        for wl in wls:
+            if wl not in trace_mod.WORKLOADS:
+                raise SpecError(f"unknown workload {wl!r} "
+                                f"(known: {sorted(trace_mod.WORKLOADS)})")
+        object.__setattr__(self, "workloads", wls)
+        if self.engine not in ("soa", "object"):
+            raise SpecError(f"unknown engine {self.engine!r} "
+                            f"(known: soa, object)")
+        if (not isinstance(self.scale, (int, float))
+                or isinstance(self.scale, bool)
+                or not math.isfinite(self.scale) or self.scale <= 0):
+            raise SpecError(f"scale must be a finite positive number, "
+                            f"got {self.scale!r}")
+        if self.processes is not None and (
+                not isinstance(self.processes, int) or self.processes < 1):
+            raise SpecError(f"processes must be a positive int or None, "
+                            f"got {self.processes!r}")
+
+    def build_configs(self) -> List[SystemParams]:
+        """Lower every hierarchy to a SystemParams, in spec order."""
+        return [h.build() for h in self.hierarchies]
+
+    def as_dict(self) -> Dict[str, Any]:
+        """JSON-able spec — what the ArtifactV1 embeds and hashes."""
+        d = {
+            "name": self.name,
+            "hierarchies": [h.as_dict() for h in self.hierarchies],
+            "workloads": list(self.workloads),
+            "engine": self.engine,
+            "scale": self.scale,
+            "native": self.native,
+        }
+        json.dumps(d)     # the spec must be JSON-able by construction
+        return d

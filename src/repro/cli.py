@@ -1,0 +1,424 @@
+"""``python -m repro`` — one front door over sim, sweep, plan, launch.
+
+Subcommands (shared flags: ``--smoke`` / ``--scale`` / ``--preset`` /
+``--set k=v`` / ``--engine`` / ``--processes`` / ``--no-native`` /
+``--out``):
+
+    repro table    paper Tables I–III over the preset ladder
+    repro sweep    design-space grid sweep (Pareto front + retune hint)
+    repro plan     capacity pass (mitigation ladder) over dry-run cells
+    repro dryrun   lower + compile the (arch × shape × mesh) matrix
+    repro train    training launcher (delegates to repro.launch.train)
+    repro serve    serving launcher (delegates to repro.launch.serve)
+    repro bench    engine throughput; ``--smoke`` = the CI gate bundle
+                   (table + sweep + plan smokes)
+
+Every artifact written lands under ``artifacts/`` as a validated
+ArtifactV1 (see ``repro.api.schema``).  The legacy module entry points
+(``python -m benchmarks.run`` / ``benchmarks.sweep`` /
+``repro.launch.dryrun``) still work but are thin shims over this CLI.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+from pathlib import Path
+from typing import Any, Dict, List, Optional
+
+REPO_ROOT = Path(__file__).resolve().parents[2]
+ARTIFACTS = REPO_ROOT / "artifacts"
+
+SMOKE_SCALE = 0.02
+
+
+# ---------------------------------------------------------------------------
+# shared helpers
+# ---------------------------------------------------------------------------
+def _add_sim_flags(ap: argparse.ArgumentParser,
+                   preset_flag: bool = True) -> None:
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny-scale CI run (seconds)")
+    ap.add_argument("--scale", type=float, default=None,
+                    help=f"workload scale (default 1.0; {SMOKE_SCALE} "
+                         f"under --smoke)")
+    ap.add_argument("--engine", default="soa", choices=["soa", "object"])
+    ap.add_argument("--processes", type=int, default=None,
+                    help="worker processes (default: auto)")
+    ap.add_argument("--no-native", action="store_true",
+                    help="force the pure-Python SoA path")
+    ap.add_argument("--set", dest="sets", action="append", default=[],
+                    metavar="PATH=VALUE",
+                    help="dotted-path override, e.g. prefetch.degree=3 "
+                         "or ta.low_utility=0.2 (repeatable)")
+    ap.add_argument("--out", default=None, help="artifact path override")
+    if preset_flag:
+        ap.add_argument("--preset", default=None,
+                        help="run one hierarchy preset instead of the "
+                             "full ladder")
+
+
+def _resolve_scale(args: argparse.Namespace) -> float:
+    if args.scale is not None:
+        return args.scale
+    return SMOKE_SCALE if args.smoke else 1.0
+
+
+def _write_artifact(art: Dict[str, Any], default_path: Path,
+                    out: Optional[str]) -> Path:
+    path = Path(out) if out else default_path
+    path.parent.mkdir(parents=True, exist_ok=True)
+    path.write_text(json.dumps(art, indent=1))
+    print(f"[repro] wrote {path}")
+    return path
+
+
+# ---------------------------------------------------------------------------
+# repro table
+# ---------------------------------------------------------------------------
+def _print_aggregate_table(aggregates: Dict[str, Dict[str, float]]) -> None:
+    from repro.api.schema import AGG_COLUMNS
+    from repro.core.presets import PAPER_TABLE
+
+    print(f"\n{'config':14s} " + "".join(f"{m:>26s}" for m in AGG_COLUMNS))
+    for cfg, agg in aggregates.items():
+        cells = []
+        for m in AGG_COLUMNS:
+            pub = PAPER_TABLE.get(cfg, {}).get(m)
+            cells.append(f"{agg[m]:9.2f} (paper {pub:7.2f})" if pub
+                         else f"{agg[m]:9.2f} {'':15s}")
+        print(f"{cfg:14s} " + "".join(f"{c:>26s}" for c in cells))
+
+
+def run_table(scale: float, engine: str = "soa", native: bool = True,
+              processes: Optional[int] = None,
+              preset: Optional[str] = None,
+              overrides: Optional[Dict[str, Any]] = None,
+              out: Optional[str] = None,
+              tool: str = "python -m repro table") -> Dict[str, Any]:
+    """The `repro table` body — also the programmatic front door."""
+    from repro.api.runner import Runner
+    from repro.api.schema import LADDER
+    from repro.api.spec import Experiment, HierarchySpec, ladder_specs
+    from repro.core.calibration import report_vs_paper
+
+    if preset is not None:
+        hierarchies = (HierarchySpec.from_preset(preset,
+                                                 overrides=overrides),)
+    else:
+        hierarchies = ladder_specs(overrides)
+    name = f"scale{scale:g}" + (f"_{preset}" if preset else "")
+    exp = Experiment(name=name, hierarchies=hierarchies, scale=scale,
+                     engine=engine, native=native, processes=processes)
+    t0 = time.time()
+    art = Runner(processes=processes).run(exp, kind="table", tool=tool)
+    aggregates = art["result"]["aggregates"]
+    _print_aggregate_table(aggregates)
+
+    if tuple(aggregates) == LADDER and len(exp.workloads) == 3:
+        # full ladder × full suite: trend verdict + full-scale hard
+        # gate + paper comparison (one definition in core.calibration)
+        report_vs_paper(aggregates, scale, engine=engine,
+                        elapsed_s=time.time() - t0)
+    _write_artifact(art, ARTIFACTS / "table" / f"table_{name}.json", out)
+    return art
+
+
+def cmd_table(args: argparse.Namespace) -> int:
+    from repro.api.registry import parse_set
+    run_table(_resolve_scale(args), engine=args.engine,
+              native=not args.no_native, processes=args.processes,
+              preset=args.preset, overrides=parse_set(args.sets) or None,
+              out=args.out)
+    return 0
+
+
+# ---------------------------------------------------------------------------
+# repro sweep
+# ---------------------------------------------------------------------------
+def run_sweep(scale: float, axes: Dict[str, list], tag: str,
+              engine: str = "soa", native: bool = True,
+              processes: Optional[int] = None, out: Optional[str] = None,
+              tool: str = "python -m repro sweep") -> Dict[str, Any]:
+    """Grid sweep of the four-row ladder; writes an ArtifactV1 whose
+    ``result`` is the full sweep payload (points, Pareto front,
+    recommended retune)."""
+    from repro.api.schema import AGG_COLUMNS, artifact_v1
+    from repro.sweep.driver import run_ladder_sweep
+    from repro.sweep.grid import enumerate_grid, grid_size
+
+    points = enumerate_grid(axes)
+    print(f"[sweep] {grid_size(axes)} points × 4-row ladder @ "
+          f"scale={scale}, engine={engine}")
+    t0 = time.time()
+    payload = run_ladder_sweep(points, scale=scale, engine=engine,
+                               processes=processes, native=native)
+    dt = time.time() - t0
+    payload["axes"] = {k: list(v) for k, v in axes.items()}
+    payload["wall_s"] = round(dt, 1)
+
+    n_front = len(payload["pareto_front"])
+    print(f"[sweep] {payload['n_points']} ladders "
+          f"({payload['n_unique_configs']} unique configs) in {dt:.1f}s — "
+          f"{payload['n_trend_ok']} trend-ok, {n_front} on the Pareto "
+          f"front")
+    for i in payload["pareto_front"]:
+        r = payload["points"][i]
+        ta = r["rows"]["tensor_aware"]
+        print(f"  pareto{'*' if r['trend_ok'] else ' '} "
+              f"lat={ta['latency_ns']:7.3f} bw={ta['bandwidth_gbps']:7.3f} "
+              f"hit={ta['hit_rate']:.4f} en={ta['energy_uj']:7.3f}  "
+              f"{r['label']}")
+    rec = payload["recommended"]
+    if rec is not None:
+        print(f"[sweep] recommended (trend-ok, max hit rate): "
+              f"{rec['label']}")
+    else:
+        print("[sweep] no trend-restoring point in this grid")
+
+    rows = [{"label": r["label"], "trend_ok": r["trend_ok"],
+             "pareto": r["pareto"],
+             **{m: r["rows"]["tensor_aware"][m] for m in AGG_COLUMNS}}
+            for r in payload["points"]]
+    spec = {"name": tag, "grid": payload["axes"], "scale": scale,
+            "engine": engine, "native": native}
+    art = artifact_v1("sweep", spec, rows, result=payload,
+                      provenance={"tool": tool, "engine": engine,
+                                  "wall_s": round(dt, 2),
+                                  "created_unix": int(time.time())})
+    _write_artifact(art, ARTIFACTS / "sweep" / f"sweep_{tag}.json", out)
+    return art
+
+
+def cmd_sweep(args: argparse.Namespace) -> int:
+    import math
+
+    from repro.api.registry import SWEEP_GRIDS, parse_set
+    from repro.sweep.grid import grid_size
+
+    if args.grid:
+        axes = dict(SWEEP_GRIDS[args.grid])
+    else:
+        axes = dict(SWEEP_GRIDS["smoke" if args.smoke else "full"])
+    sets = parse_set(args.sets)
+    for path, value in sets.items():
+        axes[path] = value if isinstance(value, list) else [value]
+    scale = _resolve_scale(args)
+    tag = (f"{args.grid}_scale{scale:g}" if args.grid
+           else "smoke" if args.smoke else f"scale{scale:g}")
+    art = run_sweep(scale, axes, tag, engine=args.engine,
+                    native=not args.no_native, processes=args.processes,
+                    out=args.out)
+    if args.smoke:
+        # acceptance gate: every grid point evaluated, every ladder row
+        # carries finite positive metrics (a NaN/garbage regression in
+        # the sweep path must fail CI, and a non-empty front alone
+        # cannot — one always exists)
+        payload = art["result"]
+        assert payload["n_points"] == grid_size(axes), payload["n_points"]
+        for r in payload["points"]:
+            for cfg, row in r["rows"].items():
+                assert all(math.isfinite(v) and v > 0
+                           for v in row.values()), (r["label"], cfg, row)
+        assert payload["pareto_front"], "empty Pareto front"
+    return 0
+
+
+# ---------------------------------------------------------------------------
+# repro plan / dryrun  (jax: import repro.launch.dryrun FIRST — it sets
+# the 512-device XLA host platform before jax initializes)
+# ---------------------------------------------------------------------------
+def _plan_smoke() -> int:
+    """The CI capacity gate: the smallest known over-budget cell must
+    plan under the 16 GiB/device budget via re-lowered mitigations."""
+    from repro.launch.dryrun import plan_cell_pass
+    from repro.plan.capacity import BUDGET_BYTES
+
+    rec = plan_cell_pass("gemma-2b", "prefill_32k", False, save=False)
+    plan = rec["plan"]
+    print(f"[plan] smoke verdict: {plan['verdict']} | after GiB: "
+          f"{plan['after_peak_bytes'] / 2**30:.2f} | rungs: "
+          f"{plan['rungs']}")
+    assert plan["verdict"] == "fits", plan
+    assert plan["after_peak_bytes"] <= BUDGET_BYTES, plan
+    return 0
+
+
+def _dryrun_argv(args: argparse.Namespace, plan: bool) -> List[str]:
+    argv: List[str] = ["--plan"] if plan else []
+    if args.all:
+        argv.append("--all")
+    if args.arch:
+        argv += ["--arch", args.arch]
+    if args.shape:
+        argv += ["--shape", args.shape]
+    argv += ["--mesh", args.mesh]
+    if getattr(args, "force", False):
+        argv.append("--force")
+    return argv
+
+
+def cmd_plan(args: argparse.Namespace) -> int:
+    if args.smoke:
+        return _plan_smoke()
+    from repro.launch.dryrun import main as dryrun_main
+    dryrun_main(_dryrun_argv(args, plan=True))
+    return 0
+
+
+def cmd_dryrun(args: argparse.Namespace) -> int:
+    from repro.launch.dryrun import main as dryrun_main
+    dryrun_main(_dryrun_argv(args, plan=False))
+    return 0
+
+
+def _add_cell_flags(ap: argparse.ArgumentParser) -> None:
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="both",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI gate: plan the gemma-2b × prefill_32k cell")
+
+
+# ---------------------------------------------------------------------------
+# repro train / serve (thin delegations)
+# ---------------------------------------------------------------------------
+def run_launcher(cmd: str, rest: List[str]) -> int:
+    """``repro train|serve …`` — everything after the subcommand goes
+    verbatim to the launcher's own argparse (so ``repro train --help``
+    shows the launcher's flags)."""
+    if cmd == "train":
+        from repro.launch.train import main as launcher_main
+    else:
+        from repro.launch.serve import main as launcher_main
+    launcher_main(rest)
+    return 0
+
+
+# ---------------------------------------------------------------------------
+# repro bench
+# ---------------------------------------------------------------------------
+def cmd_bench(args: argparse.Namespace) -> int:
+    from repro.api.bench import bench_engines
+
+    if not args.smoke:
+        scale = args.scale if args.scale is not None else 0.05
+        bench_engines(scale=scale, native=not args.no_native)
+        return 0
+
+    # --smoke: the CI gate bundle — table + sweep + plan, one command.
+    scale = args.scale if args.scale is not None else SMOKE_SCALE
+    print(f"[bench] gate 1/3: table --smoke (scale={scale:g})")
+    run_table(scale, engine=args.engine, native=not args.no_native,
+              processes=args.processes,
+              tool="python -m repro bench --smoke")
+    print(f"\n== engine throughput (reference vs soa) ==")
+    bench_engines(scale=scale, native=not args.no_native)
+
+    print(f"\n[bench] gate 2/3: sweep --smoke (scale={scale:g})")
+    # through the real sweep parser, so the gate can never drift from
+    # what `repro sweep --smoke` itself accepts
+    sweep_argv = ["sweep", "--smoke", "--scale", str(scale),
+                  "--engine", args.engine]
+    if args.no_native:
+        sweep_argv.append("--no-native")
+    if args.processes is not None:
+        sweep_argv += ["--processes", str(args.processes)]
+    rc = main(sweep_argv)
+    if rc:
+        return rc
+
+    if args.skip_plan:
+        print("\n[bench] gate 3/3: plan --smoke SKIPPED (--skip-plan)")
+        return 0
+    print("\n[bench] gate 3/3: plan --smoke (subprocess: needs the "
+          "512-device XLA host platform)")
+    import subprocess
+    env = dict(os.environ)
+    src = str(REPO_ROOT / "src")
+    env["PYTHONPATH"] = src + (os.pathsep + env["PYTHONPATH"]
+                               if env.get("PYTHONPATH") else "")
+    proc = subprocess.run([sys.executable, "-m", "repro", "plan",
+                           "--smoke"], env=env)
+    if proc.returncode != 0:
+        print("[bench] plan gate FAILED", file=sys.stderr)
+        return proc.returncode
+    print("[bench] all gates passed")
+    return 0
+
+
+# ---------------------------------------------------------------------------
+# entry
+# ---------------------------------------------------------------------------
+def main(argv: Optional[List[str]] = None) -> int:
+    argv = list(sys.argv[1:]) if argv is None else list(argv)
+    # pass-through launchers: argparse REMAINDER cannot forward leading
+    # optionals (`repro train --arch …`), so intercept before parsing
+    if argv and argv[0] in ("train", "serve"):
+        return run_launcher(argv[0], argv[1:])
+
+    ap = argparse.ArgumentParser(
+        prog="repro",
+        description="HERMES reproduction — one front door over sim, "
+                    "sweep, plan, and launch")
+    sub = ap.add_subparsers(dest="cmd", required=True)
+
+    t = sub.add_parser("table", help="paper Tables I–III over the "
+                                     "preset ladder")
+    _add_sim_flags(t)
+    t.set_defaults(func=cmd_table)
+
+    s = sub.add_parser("sweep", help="design-space grid sweep")
+    _add_sim_flags(s, preset_flag=False)
+    s.add_argument("--grid", default=None, choices=[None, "full", "smoke",
+                                                    "stream_rank"],
+                   help="named grid (--set path=[v1,v2] adds/overrides "
+                        "an axis)")
+    s.set_defaults(func=cmd_sweep)
+
+    p = sub.add_parser("plan", help="capacity pass over dry-run cells")
+    _add_cell_flags(p)
+    p.set_defaults(func=cmd_plan)
+
+    d = sub.add_parser("dryrun", help="lower + compile the "
+                                      "(arch × shape × mesh) matrix")
+    _add_cell_flags(d)
+    d.set_defaults(func=cmd_dryrun)
+
+    # stubs so `repro --help` lists them; parsing is intercepted above
+    sub.add_parser("train", add_help=False,
+                   help="training launcher (args pass through)")
+    sub.add_parser("serve", add_help=False,
+                   help="serving launcher (args pass through)")
+
+    b = sub.add_parser("bench", help="engine throughput bench; --smoke "
+                                     "= table+sweep+plan CI gates")
+    b.add_argument("--smoke", action="store_true",
+                   help="run the CI gate bundle instead of the bench")
+    b.add_argument("--scale", type=float, default=None,
+                   help="workload scale (default 0.05; "
+                        f"{SMOKE_SCALE} under --smoke)")
+    b.add_argument("--engine", default="soa", choices=["soa", "object"],
+                   help="engine for the --smoke table/sweep gates (the "
+                        "throughput bench always measures both)")
+    b.add_argument("--processes", type=int, default=None,
+                   help="worker processes for the --smoke gates")
+    b.add_argument("--no-native", action="store_true",
+                   help="force the pure-Python SoA path")
+    b.add_argument("--skip-plan", action="store_true",
+                   help="under --smoke: skip the (slow, jax-lowering) "
+                        "plan gate")
+    b.set_defaults(func=cmd_bench)
+
+    args = ap.parse_args(argv)
+    return args.func(args)
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

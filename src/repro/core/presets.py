@@ -69,6 +69,10 @@ TENSOR_AWARE = dataclasses.replace(
 
 CONFIGS: List[SystemParams] = [BASELINE, SHARED_L3, PREFETCH, TENSOR_AWARE]
 
+#: name → preset, the string-addressable registry the ``repro.api``
+#: front door (HierarchySpec.preset) resolves against
+PRESETS: Dict[str, SystemParams] = {sp.name: sp for sp in CONFIGS}
+
 #: Paper-published values for validation (Tables I, II, III).
 PAPER_TABLE: Dict[str, Dict[str, float]] = {
     "baseline":     {"latency_ns": 120, "bandwidth_gbps": 25,

@@ -44,14 +44,18 @@ Usage:
 import argparse
 import json
 import re
+import sys
 import time
 import traceback
 from pathlib import Path
-from typing import Any, Dict, Optional
+from typing import Any, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
+
+from repro.api.schema import (ROOFLINE_TERMS, V5E_HBM_BW, V5E_ICI_BW,
+                              V5E_PEAK_FLOPS, dump_record, load_record)
 
 from repro.configs.base import SHAPES, RunConfig
 from repro.configs.registry import (ARCH_IDS, ARCHS, cell_supported,
@@ -289,7 +293,6 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
              rc_overrides: Optional[Dict[str, Any]] = None
              ) -> Dict[str, Any]:
     mesh_name = "multi" if multi_pod else "single"
-    out_path = ARTIFACTS / f"{arch}__{shape_name}__{mesh_name}.json"
     cfg = ARCHS[arch]
     sc = SHAPES[shape_name]
     ok, why = cell_supported(cfg, sc)
@@ -297,8 +300,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
         rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
                "status": "skipped", "reason": why}
         if save:
-            out_path.parent.mkdir(parents=True, exist_ok=True)
-            out_path.write_text(json.dumps(rec, indent=1))
+            _save_rec(rec, arch, shape_name, mesh_name)
         return rec
 
     rc = (get_run_config(arch, shape_name, **rc_overrides)
@@ -320,14 +322,14 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
             coll = collective_bytes(txt)
             hlo = analyze(txt).as_dict()
             _adjust_mem(mem, hlo)
-        # roofline terms (per chip): TPU v5e — 197 TF/s bf16, 819 GB/s HBM,
-        # ~50 GB/s/link ICI (DESIGN §7)
-        terms = {
-            "compute_s": hlo["flops"] / 197e12,
-            "memory_s": hlo["hbm_bytes"] / 819e9,
-            "collective_s": hlo["collective_total"] / 50e9,
-        }
-        terms["dominant"] = max(terms, key=lambda k: terms[k])
+        # roofline terms (per chip): TPU v5e constants + term names are
+        # shared with benchmarks/roofline.py via api.schema
+        terms = dict(zip(ROOFLINE_TERMS, (
+            hlo["flops"] / V5E_PEAK_FLOPS,
+            hlo["hbm_bytes"] / V5E_HBM_BW,
+            hlo["collective_total"] / V5E_ICI_BW,
+        )))
+        terms["dominant"] = max(ROOFLINE_TERMS, key=lambda k: terms[k])
         sc_ = SHAPES[shape_name]
         tokens = sc_.global_batch * (sc_.seq_len if sc_.kind == "train" else 1)
         if sc_.kind == "prefill":
@@ -369,9 +371,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
             print(f"[dryrun] {arch} × {shape_name} × {mesh_name}: "
                   f"{rec['status'].upper()} {rec.get('error', '')}")
     if save:
-        out_path.parent.mkdir(parents=True, exist_ok=True)
-        slim = {k: v for k, v in rec.items() if k != "trace"}
-        out_path.write_text(json.dumps(slim, indent=1))
+        _save_rec(rec, arch, shape_name, mesh_name)
     return rec
 
 
@@ -386,10 +386,14 @@ def _adjusted_peak(rec: Dict[str, Any]) -> int:
 
 def _save_rec(rec: Dict[str, Any], arch: str, shape: str,
               mesh_name: str) -> None:
+    """Persist one cell record as an ArtifactV1 ``dryrun_cell`` envelope
+    (readers use ``api.schema.load_record``, which also accepts the
+    committed pre-PR-5 bare records)."""
     out_path = ARTIFACTS / f"{arch}__{shape}__{mesh_name}.json"
-    out_path.parent.mkdir(parents=True, exist_ok=True)
     slim = {k: v for k, v in rec.items() if k != "trace"}
-    out_path.write_text(json.dumps(slim, indent=1))
+    dump_record(out_path, "dryrun_cell",
+                {"arch": arch, "shape": shape, "mesh": mesh_name},
+                slim, tool="python -m repro dryrun")
 
 
 def plan_cell_pass(arch: str, shape: str, multi_pod: bool,
@@ -413,7 +417,7 @@ def plan_cell_pass(arch: str, shape: str, multi_pod: bool,
     budget = BUDGET_BYTES if budget is None else budget
     mesh_name = "multi" if multi_pod else "single"
     path = ARTIFACTS / f"{arch}__{shape}__{mesh_name}.json"
-    rec = json.loads(path.read_text()) if path.exists() else None
+    rec = load_record(path) if path.exists() else None
     fresh = rec is None or rec.get("status") == "error"
     if fresh:
         rec = run_cell(arch, shape, multi_pod, save=save)
@@ -524,7 +528,20 @@ def plan_cell_pass(arch: str, shape: str, multi_pod: bool,
     return best_rec
 
 
-def main() -> None:
+def _matrix_cell(arch: str, shape: str, multi: bool,
+                 force: bool) -> Dict[str, Any]:
+    mesh_name = "multi" if multi else "single"
+    path = ARTIFACTS / f"{arch}__{shape}__{mesh_name}.json"
+    if path.exists() and not force:
+        rec = load_record(path)
+        if rec["status"] != "error":       # retry failed cells
+            print(f"[dryrun] {arch} × {shape} × {mesh_name}: "
+                  f"cached ({rec['status']})")
+            return rec
+    return run_cell(arch, shape, multi)
+
+
+def main(argv: Optional[List[str]] = None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default=None, choices=ARCH_IDS + [None])
     ap.add_argument("--shape", default=None, choices=list(SHAPES) + [None])
@@ -537,7 +554,7 @@ def main() -> None:
                     help="capacity pass: re-lower over-budget cells with "
                          "the repro.plan mitigation ladder and write the "
                          "verdict table to artifacts/plan/")
-    args = ap.parse_args()
+    args = ap.parse_args(argv)
 
     archs = [args.arch] if args.arch else ARCH_IDS
     shapes = [args.shape] if args.shape else list(SHAPES)
@@ -546,38 +563,32 @@ def main() -> None:
     if not args.all and not args.arch:
         ap.error("pass --all or --arch")
 
+    cells = [(arch, shape, multi) for arch in archs for shape in shapes
+             for multi in meshes]
+    # the Runner's serial failure-isolated map: cells share this
+    # process's 512-device jax, so they cannot fan out, but one
+    # unexpectedly crashing cell must not abort the rest of the matrix
+    from repro.api.runner import Runner
+
     if args.plan:
-        n_err = 0
-        for arch in archs:
-            for shape in shapes:
-                for multi in meshes:
-                    rec = plan_cell_pass(arch, shape, multi)
-                    n_err += rec.get("status") == "error"
+        results = Runner().map(plan_cell_pass, cells, label="plan")
+        n_err = sum(1 for r in results
+                    if r["status"] == "error"
+                    or r["value"].get("status") == "error")
         from repro.plan.report import write_report
         payload = write_report()
         if n_err or payload["over_budget_unexplained"]:
             raise SystemExit(1)
         return
 
-    n_ok = n_skip = n_err = 0
-    for arch in archs:
-        for shape in shapes:
-            for multi in meshes:
-                mesh_name = "multi" if multi else "single"
-                path = ARTIFACTS / f"{arch}__{shape}__{mesh_name}.json"
-                rec = None
-                if path.exists() and not args.force:
-                    rec = json.loads(path.read_text())
-                    if rec["status"] == "error":
-                        rec = None         # retry failed cells
-                    else:
-                        print(f"[dryrun] {arch} × {shape} × {mesh_name}: "
-                              f"cached ({rec['status']})")
-                if rec is None:
-                    rec = run_cell(arch, shape, multi)
-                n_ok += rec["status"] == "ok"
-                n_skip += rec["status"] == "skipped"
-                n_err += rec["status"] == "error"
+    results = Runner().map(
+        lambda a, s, m: _matrix_cell(a, s, m, args.force), cells,
+        label="dryrun")
+    recs = [r["value"] for r in results if r["status"] == "ok"]
+    n_ok = sum(r["status"] == "ok" for r in recs)
+    n_skip = sum(r["status"] == "skipped" for r in recs)
+    n_err = sum(r["status"] == "error" for r in recs) \
+        + sum(r["status"] == "error" for r in results)
     print(f"[dryrun] done: {n_ok} ok, {n_skip} skipped (by design), "
           f"{n_err} errors")
     if n_err:
@@ -585,4 +596,7 @@ def main() -> None:
 
 
 if __name__ == "__main__":
+    print("[deprecated] `python -m repro.launch.dryrun` → use "
+          "`python -m repro dryrun` (capacity pass: `python -m repro "
+          "plan`)", file=sys.stderr)
     main()

@@ -19,7 +19,7 @@ from repro.models import model as mdl
 from repro.serve.engine import Request, ServingEngine
 
 
-def main() -> None:
+def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True, choices=ARCH_IDS)
     ap.add_argument("--requests", type=int, default=8)
@@ -34,7 +34,7 @@ def main() -> None:
                     help="fraction of KV pages resident in the HBM tier "
                          "(default: RunConfig.hbm_kv_budget_frac); the "
                          "rest demotes to the host-DRAM pool")
-    args = ap.parse_args()
+    args = ap.parse_args(argv)
 
     cfg = get_config(args.arch, smoke=True)
     rc = RunConfig(remat="none")

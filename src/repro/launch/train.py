@@ -72,7 +72,7 @@ def train_offloaded(cfg, rc: RunConfig, *, batch: int, seq: int,
     return losses, opt
 
 
-def main() -> None:
+def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True, choices=ARCH_IDS)
     ap.add_argument("--smoke", action="store_true", default=True,
@@ -89,7 +89,7 @@ def main() -> None:
     ap.add_argument("--offload-optimizer", action="store_true",
                     help="AdamW moments in host DRAM via "
                          "tpu/offload.OffloadedAdamW (capacity tier)")
-    args = ap.parse_args()
+    args = ap.parse_args(argv)
 
     cfg = get_config(args.arch, smoke=args.smoke)
     rc = RunConfig(microbatches=args.microbatches, learning_rate=args.lr,

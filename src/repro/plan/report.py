@@ -37,9 +37,11 @@ def _peak(rec: Dict[str, Any]) -> int:
 
 
 def collect(dryrun_dir: Path = DRYRUN) -> List[Dict[str, Any]]:
+    from repro.api.schema import load_record
     rows = []
     for p in sorted(dryrun_dir.glob("*.json")):
-        rec = json.loads(p.read_text())
+        # both generations: bare pre-PR-5 records and V1 envelopes
+        rec = load_record(p)
         if rec.get("status") != "ok":
             continue
         peak = _peak(rec)
@@ -85,8 +87,10 @@ def write_report(dryrun_dir: Path = DRYRUN, plan_dir: Path = PLAN,
         "over_budget_unexplained": len(over_unexplained),
         "cells": rows,
     }
-    plan_dir.mkdir(parents=True, exist_ok=True)
-    (plan_dir / "plan_report.json").write_text(json.dumps(payload, indent=1))
+    from repro.api.schema import dump_record
+    dump_record(plan_dir / "plan_report.json", "plan",
+                {"budget_gib": BUDGET_BYTES / _GIB, "n_cells": len(rows)},
+                payload, tool="python -m repro plan")
 
     md = ["# Capacity plan — dry-run matrix vs 16 GiB/device (v5e)", "",
           f"Budget: {BUDGET_BYTES / _GIB:.0f} GiB/device, applied to the "

@@ -13,50 +13,22 @@ Two sweep shapes:
   aggregates plus the strict-monotonicity verdict
   (``calibration.trend_ok``) — the tool that retunes the paper table.
 
-Parallelism: cells are independent, so (workload × config-chunk) tasks
-fan out over a spawn pool; each worker generates its workload trace once
-and reuses it across its chunk's configs.  Configs are deduplicated by
-value first (frozen dataclasses hash), so ladder sweeps sharing prefetch
-rows don't re-simulate them.
+Execution is delegated to the ``repro.api`` Runner — the one
+process-parallel path (config dedup by value, spawn pool with per-chunk
+trace reuse, native-kernel detection, failure isolation) shared with
+``benchmarks.tables`` and the ``python -m repro`` CLI.
 """
 
 from __future__ import annotations
 
-import os
-import time
 from typing import Any, Dict, List, Mapping, Optional, Sequence, Tuple
 
-from repro.core import trace as trace_mod
-from repro.core.calibration import aggregate_rows, trend_ok
+from repro.api.schema import LADDER  # noqa: F401  (canonical row order)
+from repro.core.calibration import trend_ok
 from repro.core.params import SystemParams
 from repro.core.presets import BASELINE, PREFETCH, SHARED_L3, TENSOR_AWARE
-from repro.core.simulator import HierarchySim
 from repro.sweep.grid import apply_point, point_label
 from repro.sweep.pareto import OBJECTIVES, pareto_front
-
-#: ladder row order, as in presets.CONFIGS / calibration.trend_ok
-LADDER = ("baseline", "shared_l3", "prefetch", "tensor_aware")
-
-
-def _chunk_cells(args: Tuple) -> List[Tuple[int, str, Dict, float]]:
-    """One worker task: all configs of one chunk on one workload.
-
-    Top-level so it pickles under the spawn start method.  Returns
-    ``[(config_index, workload, metrics_row, accesses_per_sec)]``.
-    """
-    wl_name, scale, engine, native, indexed_cfgs = args
-    tr = trace_mod.WORKLOADS[wl_name](scale=scale)
-    out = []
-    for idx, sp in indexed_cfgs:
-        sim = HierarchySim(sp, engine=engine)
-        if not native:
-            sim.native = False
-        t0 = time.perf_counter()
-        metrics = sim.run(tr)
-        dt = time.perf_counter() - t0
-        out.append((idx, wl_name, metrics.row(),
-                    len(tr["core"]) / max(dt, 1e-9)))
-    return out
 
 
 def run_config_sweep(configs: Sequence[SystemParams], scale: float = 1.0,
@@ -72,41 +44,12 @@ def run_config_sweep(configs: Sequence[SystemParams], scale: float = 1.0,
         {"name": ..., "aggregate": {latency_ns, bandwidth_gbps, hit_rate,
          energy_uj, per_workload}, "accesses_per_sec": {workload: rate}}
     """
-    wls = list(workloads) if workloads is not None \
-        else list(trace_mod.WORKLOADS)
-    indexed = list(enumerate(configs))
-    processes = processes if processes is not None \
-        else min(len(wls) * max(1, len(indexed) // 4) or 1,
-                 os.cpu_count() or 1)
-    # chunk configs so every process gets work without regenerating the
-    # trace per config; ~processes tasks per workload
-    per_wl = max(1, (processes + len(wls) - 1) // len(wls))
-    csize = max(1, (len(indexed) + per_wl - 1) // per_wl)
-    chunks = [indexed[i:i + csize] for i in range(0, len(indexed), csize)]
-    tasks = [(wl, scale, engine, native, chunk)
-             for wl in wls for chunk in chunks]
-    if processes > 1 and len(tasks) > 1:
-        import multiprocessing as mp
-        # spawn keeps workers from inheriting jax/XLA state
-        with mp.get_context("spawn").Pool(processes) as pool:
-            results = pool.map(_chunk_cells, tasks)
-    else:
-        results = [_chunk_cells(t) for t in tasks]
-    rows: Dict[int, List[Tuple[str, Dict]]] = {i: [] for i, _ in indexed}
-    rates: Dict[int, Dict[str, float]] = {i: {} for i, _ in indexed}
-    for batch in results:
-        for idx, wl_name, row, rate in batch:
-            rows[idx].append((wl_name, row))
-            rates[idx][wl_name] = round(rate, 1)
-    out = []
-    for idx, sp in indexed:
-        # aggregate in canonical workload order regardless of completion
-        ordered = [row for _, row in
-                   sorted(rows[idx], key=lambda wr: wls.index(wr[0]))]
-        out.append({"name": sp.name,
-                    "aggregate": aggregate_rows(ordered),
-                    "accesses_per_sec": rates[idx]})
-    return out
+    # lazy: this module loads with the sweep package __init__; the
+    # Runner (and its multiprocessing machinery) only at execution time
+    from repro.api.runner import Runner
+    return Runner(processes=processes).run_configs(
+        configs, workloads=workloads, scale=scale, engine=engine,
+        native=native)
 
 
 def _split_overrides(point: Mapping[str, Any]) -> Tuple[Dict, Dict]:

@@ -11,14 +11,13 @@ from __future__ import annotations
 
 from typing import Dict, List, Mapping, Sequence, Tuple
 
+from repro.api.schema import AGG_COLUMNS, METRIC_SENSE
+
 #: (metric key, sense): +1 = maximize, -1 = minimize — the paper's four
-#: Table I-III metrics in their canonical order.
-OBJECTIVES: Tuple[Tuple[str, int], ...] = (
-    ("latency_ns", -1),
-    ("bandwidth_gbps", +1),
-    ("hit_rate", +1),
-    ("energy_uj", -1),
-)
+#: Table I-III metrics in their canonical order (api.schema owns both
+#: the names and the senses).
+OBJECTIVES: Tuple[Tuple[str, int], ...] = tuple(
+    (col, METRIC_SENSE[col]) for col in AGG_COLUMNS)
 
 
 def _vector(row: Mapping[str, float],

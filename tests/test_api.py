@@ -1,0 +1,322 @@
+"""The ``repro.api`` front door: spec validation, preset round-trips,
+ArtifactV1 schema, CLI smoke, and the PR-5 acceptance criterion — the
+new ``python -m repro table`` and the legacy ``benchmarks`` path produce
+bit-identical Metrics rows.
+"""
+
+import json
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+from repro.api import schema as schema_mod
+from repro.api.registry import SWEEP_GRIDS, parse_set
+from repro.api.runner import Runner, RunnerError
+from repro.api.spec import (Experiment, HierarchySpec, SpecError,
+                            ladder_specs)
+from repro.core.params import SystemParams
+from repro.core.presets import PRESETS
+
+REPO = Path(__file__).resolve().parents[1]
+#: equivalence scale from the acceptance criterion; tiny scale for the
+#: rest (the validation logic doesn't depend on trace size)
+EQUIV_SCALE = 0.05
+TINY = 0.01
+
+
+def _run_cli(argv, timeout=900):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = (str(REPO / "src")
+                         + (os.pathsep + env["PYTHONPATH"]
+                            if env.get("PYTHONPATH") else ""))
+    return subprocess.run([sys.executable, "-m", *argv],
+                          capture_output=True, text=True, timeout=timeout,
+                          cwd=str(REPO), env=env)
+
+
+# ---------------------------------------------------------------------------
+# Experiment / HierarchySpec validation
+# ---------------------------------------------------------------------------
+class TestSpecValidation:
+    def test_unknown_workload(self):
+        with pytest.raises(SpecError, match="unknown workload"):
+            Experiment(name="x", workloads=("cnn", "nope"))
+
+    def test_empty_hierarchies_and_workloads(self):
+        with pytest.raises(SpecError, match="at least one hierarchy"):
+            Experiment(name="x", hierarchies=())
+        with pytest.raises(SpecError, match="at least one workload"):
+            Experiment(name="x", workloads=())
+
+    def test_bad_engine_and_scale(self):
+        with pytest.raises(SpecError, match="unknown engine"):
+            Experiment(name="x", engine="warp")
+        for bad in (0, -1.0, float("nan"), float("inf")):
+            with pytest.raises(SpecError, match="scale"):
+                Experiment(name="x", scale=bad)
+
+    def test_bad_processes_and_name(self):
+        with pytest.raises(SpecError, match="processes"):
+            Experiment(name="x", processes=0)
+        with pytest.raises(SpecError, match="name"):
+            Experiment(name="")
+
+    def test_duplicate_hierarchy_names(self):
+        h = HierarchySpec.from_preset("baseline")
+        with pytest.raises(SpecError, match="unique"):
+            Experiment(name="x", hierarchies=(h, h))
+
+    def test_unknown_preset(self):
+        with pytest.raises(SpecError, match="unknown preset"):
+            HierarchySpec.from_preset("l4_cache")
+
+    def test_bad_override_path_fails_at_construction(self):
+        with pytest.raises(SpecError, match="cannot apply overrides"):
+            HierarchySpec.from_preset("prefetch",
+                                      overrides={"prefetch.warp": 9})
+
+    def test_override_on_missing_level_fails(self):
+        # baseline has no L3: a literal l3.* path cannot resolve
+        with pytest.raises(SpecError, match="cannot apply overrides"):
+            HierarchySpec.from_preset("baseline",
+                                      overrides={"l3.policy": "lru"})
+
+    def test_parse_set(self):
+        got = parse_set(["prefetch.degree=3", "l2.policy=lru",
+                         "ta.low_utility=0.2"])
+        assert got == {"prefetch.degree": 3, "l2.policy": "lru",
+                       "ta.low_utility": 0.2}
+        with pytest.raises(SpecError, match="path=value"):
+            parse_set(["prefetch.degree"])
+        with pytest.raises(SpecError, match="twice"):
+            parse_set(["a=1", "a=2"])
+
+
+# ---------------------------------------------------------------------------
+# HierarchySpec → SystemParams round-trip (acceptance: bit-identical to
+# presets.PRESETS)
+# ---------------------------------------------------------------------------
+class TestHierarchyRoundTrip:
+    @pytest.mark.parametrize("name", sorted(PRESETS))
+    def test_preset_round_trip_bit_identical(self, name):
+        sp = HierarchySpec.from_preset(name).build()
+        assert isinstance(sp, SystemParams)
+        # frozen-dataclass equality IS bit-identity (every leaf field)
+        assert sp == PRESETS[name]
+
+    def test_ladder_specs_cover_the_ladder_in_order(self):
+        assert tuple(h.name for h in ladder_specs()) == schema_mod.LADDER
+
+    def test_overrides_produce_distinct_first_class_config(self):
+        h = HierarchySpec.from_preset(
+            "tensor_aware", name="ta_deep",
+            overrides={"prefetch.degree": 4, "ta.low_utility": 0.2})
+        sp = h.build()
+        assert sp != PRESETS["tensor_aware"]
+        assert sp.name == "ta_deep"
+        assert sp.prefetch.degree == 4
+        assert sp.l3.ta.low_utility == 0.2
+        assert hash(sp) is not None      # still frozen/hashable
+
+    def test_sweep_grid_axes_are_valid_override_paths(self):
+        # the registry's named grids must build against their rows
+        for grid in SWEEP_GRIDS.values():
+            for path, values in grid.items():
+                HierarchySpec.from_preset("tensor_aware",
+                                          overrides={path: values[0]})
+
+
+# ---------------------------------------------------------------------------
+# ArtifactV1 schema
+# ---------------------------------------------------------------------------
+class TestArtifactV1:
+    @pytest.fixture(scope="class")
+    def tiny_artifact(self):
+        exp = Experiment(name="tiny", workloads=("cnn",), scale=TINY,
+                         processes=1)
+        return Runner().run(exp, kind="table")
+
+    def test_round_trip_validates(self, tiny_artifact):
+        art = schema_mod.validate_artifact(tiny_artifact)
+        again = json.loads(json.dumps(art))
+        assert schema_mod.validate_artifact(again) == art
+        assert len(art["rows"]) == 4          # 4 presets × 1 workload
+        assert set(art["result"]["aggregates"]) == set(schema_mod.LADDER)
+        assert art["provenance"]["engine"] == "soa"
+
+    def test_rows_carry_every_metrics_column(self, tiny_artifact):
+        for row in tiny_artifact["rows"]:
+            assert set(schema_mod.METRIC_ROW_KEYS) <= set(row)
+
+    def test_tampered_spec_fails(self, tiny_artifact):
+        art = json.loads(json.dumps(tiny_artifact))
+        art["spec"]["scale"] = 999
+        with pytest.raises(schema_mod.ArtifactError, match="spec_hash"):
+            schema_mod.validate_artifact(art)
+
+    def test_wrong_schema_tag_and_kind_fail(self, tiny_artifact):
+        art = json.loads(json.dumps(tiny_artifact))
+        art["kind"] = "mystery"
+        with pytest.raises(schema_mod.ArtifactError, match="kind"):
+            schema_mod.validate_artifact(art)
+        art2 = json.loads(json.dumps(tiny_artifact))
+        art2["schema"] = "repro.artifact.v0"
+        with pytest.raises(schema_mod.ArtifactError, match="schema tag"):
+            schema_mod.validate_artifact(art2)
+
+    def test_non_finite_metric_fails(self, tiny_artifact):
+        art = json.loads(json.dumps(tiny_artifact))
+        art["rows"][0]["hit_rate"] = float("nan")
+        with pytest.raises(schema_mod.ArtifactError, match="not finite"):
+            schema_mod.validate_artifact(art)
+
+    def test_record_envelope_round_trip(self, tmp_path):
+        rec = {"status": "ok", "arch": "a"}
+        p = tmp_path / "cell.json"
+        schema_mod.dump_record(p, "dryrun_cell", {"arch": "a"}, rec)
+        assert schema_mod.validate_artifact(json.loads(p.read_text()))
+        assert schema_mod.load_record(p) == rec
+        # pre-PR-5 bare records load unchanged
+        p2 = tmp_path / "legacy.json"
+        p2.write_text(json.dumps(rec))
+        assert schema_mod.load_record(p2) == rec
+
+    def test_canonical_columns_single_source(self):
+        # the one place the stringly-duplicated lists now live
+        from repro.core.simulator import Metrics
+        import dataclasses
+        from repro.sweep.pareto import OBJECTIVES
+        assert schema_mod.METRIC_ROW_KEYS == tuple(
+            f.name for f in dataclasses.fields(Metrics))
+        assert tuple(k for k, _ in OBJECTIVES) == schema_mod.AGG_COLUMNS
+        assert all(schema_mod.AGG_SOURCES[c] in schema_mod.METRIC_ROW_KEYS
+                   for c in schema_mod.AGG_COLUMNS)
+
+
+# ---------------------------------------------------------------------------
+# Runner semantics
+# ---------------------------------------------------------------------------
+class TestRunner:
+    def test_dedup_identical_configs_simulate_once(self):
+        sp = PRESETS["baseline"]
+        res = Runner(processes=1).run_configs([sp, sp], workloads=["cnn"],
+                                             scale=TINY)
+        assert len(res) == 2
+        assert res[0]["rows"]["cnn"] == res[1]["rows"]["cnn"]
+
+    @staticmethod
+    def _bad_config():
+        # 96 sets is not a power of two: CacheParams.n_sets raises when
+        # the engine builds its tag store — a realistic mid-cell crash
+        import dataclasses
+
+        from repro.core.params import CacheParams
+        return dataclasses.replace(
+            PRESETS["baseline"], name="bad",
+            l1=CacheParams("L1", 48 * 1024, 8, hit_latency=4))
+
+    def test_failure_isolation_names_the_cell(self):
+        with pytest.raises(RunnerError, match="bad × cnn"):
+            Runner(processes=1).run_configs(
+                [PRESETS["baseline"], self._bad_config()],
+                workloads=["cnn"], scale=TINY)
+
+    def test_non_strict_reports_errors_per_config(self):
+        res = Runner(processes=1).run_configs(
+            [PRESETS["baseline"], self._bad_config()],
+            workloads=["cnn"], scale=TINY, strict=False)
+        assert "errors" not in res[0]
+        assert "cnn" in res[1]["errors"]
+
+
+# ---------------------------------------------------------------------------
+# CLI subprocess smoke + deprecation shims
+# ---------------------------------------------------------------------------
+class TestCLI:
+    def test_repro_table_smoke_writes_valid_artifact(self, tmp_path):
+        out = tmp_path / "table.json"
+        r = _run_cli(["repro", "table", "--smoke", "--scale", str(TINY),
+                      "--out", str(out)])
+        assert r.returncode == 0, r.stderr[-2000:]
+        assert "Table I" not in r.stdout  # new front door: unified table
+        art = schema_mod.validate_artifact(json.loads(out.read_text()))
+        assert art["kind"] == "table"
+        assert art["provenance"]["tool"] == "python -m repro table"
+
+    def test_repro_table_preset_and_set(self, tmp_path):
+        out = tmp_path / "one.json"
+        r = _run_cli(["repro", "table", "--smoke", "--scale", str(TINY),
+                      "--preset", "prefetch", "--set",
+                      "prefetch.degree=4", "--out", str(out)])
+        assert r.returncode == 0, r.stderr[-2000:]
+        art = schema_mod.validate_artifact(json.loads(out.read_text()))
+        assert [h["name"] for h in art["spec"]["hierarchies"]] \
+            == ["prefetch"]
+        assert art["spec"]["hierarchies"][0]["overrides"] \
+            == {"prefetch.degree": 4}
+
+    def test_repro_sweep_smoke_writes_valid_artifact(self, tmp_path):
+        out = tmp_path / "sweep.json"
+        r = _run_cli(["repro", "sweep", "--smoke", "--scale", "0.005",
+                      "--out", str(out)])
+        assert r.returncode == 0, r.stderr[-2000:]
+        art = schema_mod.validate_artifact(json.loads(out.read_text()))
+        assert art["kind"] == "sweep"
+        assert art["result"]["n_points"] == 8      # the smoke grid
+        assert len(art["rows"]) == 8
+
+    def test_legacy_benchmarks_run_shim_points_to_repro(self):
+        r = _run_cli(["benchmarks.run", "--smoke", "--scale", "0.005"])
+        assert r.returncode == 0, r.stderr[-2000:]
+        assert "python -m repro table" in r.stderr
+        assert "monotone trend" in r.stdout    # still does its job
+
+    def test_legacy_benchmarks_sweep_shim_points_to_repro(self, tmp_path):
+        # --out keeps the committed artifacts/sweep/sweep_smoke.json
+        # (written at the canonical smoke scale) out of the test's blast
+        # radius
+        r = _run_cli(["benchmarks.sweep", "--smoke", "--scale", "0.005",
+                      "--out", str(tmp_path / "sweep.json")])
+        assert r.returncode == 0, r.stderr[-2000:]
+        assert "python -m repro sweep" in r.stderr
+        assert "pareto" in r.stdout
+        assert schema_mod.validate_artifact(
+            json.loads((tmp_path / "sweep.json").read_text()))
+
+    def test_legacy_dryrun_shim_points_to_repro(self):
+        # no args → argparse usage error (exit 2), but the pointer must
+        # print first; this keeps the (slow) jax lowering out of tier-1
+        r = _run_cli(["repro.launch.dryrun"])
+        assert r.returncode == 2
+        assert "python -m repro dryrun" in r.stderr
+
+
+# ---------------------------------------------------------------------------
+# acceptance: new CLI ≡ legacy path, bit-identical Metrics rows
+# ---------------------------------------------------------------------------
+def test_new_cli_and_legacy_rows_bit_identical(tmp_path):
+    """`python -m repro table --scale 0.05` vs the legacy
+    `python -m benchmarks.run` table path: every per-(config, workload)
+    Metrics row must match float-for-float."""
+    out = tmp_path / "table.json"
+    r = _run_cli(["repro", "table", "--scale", str(EQUIV_SCALE),
+                  "--out", str(out)])
+    assert r.returncode == 0, r.stderr[-2000:]
+    art = schema_mod.validate_artifact(json.loads(out.read_text()))
+    cli_rows = {(row["name"], row["workload"]): row
+                for row in art["rows"]}
+
+    from benchmarks.tables import run_suite_parallel
+    legacy = run_suite_parallel(scale=EQUIV_SCALE)
+    legacy_rows = {(row["name"], row["workload"]): row
+                   for cfg in legacy.values()
+                   for row in cfg["per_workload"]}
+
+    assert set(cli_rows) == set(legacy_rows)
+    assert len(cli_rows) == 12           # 4 presets × 3 workloads
+    for key, row in legacy_rows.items():
+        # JSON round-trips IEEE doubles exactly: == is bit-identity
+        assert cli_rows[key] == row, key

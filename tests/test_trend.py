@@ -15,6 +15,7 @@ import os
 
 import pytest
 
+from repro.api.schema import AGG_COLUMNS, LADDER
 from repro.core.calibration import trend_ok
 from repro.core.presets import PAPER_TABLE
 
@@ -36,10 +37,8 @@ def full_scale_results():
 def test_trend_monotone_at_full_scale(full_scale_results):
     res = full_scale_results
     assert trend_ok(res), {
-        cfg: {m: round(res[cfg][m], 4)
-              for m in ("latency_ns", "bandwidth_gbps", "hit_rate",
-                        "energy_uj")}
-        for cfg in ("baseline", "shared_l3", "prefetch", "tensor_aware")}
+        cfg: {m: round(res[cfg][m], 4) for m in AGG_COLUMNS}
+        for cfg in LADDER}
 
 
 def test_hit_rate_ordering_restored(full_scale_results):
