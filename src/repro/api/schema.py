@@ -45,8 +45,17 @@ from repro.core.simulator import Metrics
 
 SCHEMA_V1 = "repro.artifact.v1"
 
+#: schema tag of the per-campaign resume journal (one JSON line per
+#: completed cell, header line first — see ``api.runner``)
+JOURNAL_SCHEMA = "repro.journal.v1"
+
 #: artifact kinds the front door emits
 KINDS = ("table", "sweep", "bench", "plan", "dryrun_cell")
+
+#: the structured failure row every execute path (pool, serial map)
+#: records for a permanently-failed cell — canonical keys, one shape
+FAILURE_ROW_KEYS = ("config", "config_hash", "workload", "error",
+                    "traceback", "attempts", "duration_s", "fault")
 
 #: per-cell Metrics.row() columns — derived, not re-typed
 METRIC_ROW_KEYS = tuple(f.name for f in dataclasses.fields(Metrics))
@@ -95,6 +104,41 @@ def spec_hash(spec: Mapping[str, Any]) -> str:
     blob = json.dumps(spec, sort_keys=True, separators=(",", ":"),
                       default=str)
     return "sha256:" + hashlib.sha256(blob.encode()).hexdigest()
+
+
+def failure_row(config: str, config_hash: str, workload: str, error: str,
+                traceback_text: str = "", attempts: int = 1,
+                duration_s: float = 0.0,
+                fault: Optional[str] = None) -> Dict[str, Any]:
+    """One structured failure record — the single shape shared by the
+    pool path (``Runner.run_configs``), the serial path (``Runner.map``)
+    and artifact provenance, so no failure is ever a bare string."""
+    return {"config": config, "config_hash": config_hash,
+            "workload": workload, "error": str(error),
+            "traceback": traceback_text, "attempts": int(attempts),
+            "duration_s": round(float(duration_s), 3), "fault": fault}
+
+
+#: provenance keys that legitimately differ between two runs of the
+#: same spec (timing, host throughput, retry counts, journal paths)
+VOLATILE_PROVENANCE = ("wall_s", "created_unix", "python",
+                       "accesses_per_sec", "resilience", "fingerprint",
+                       "failures")
+
+
+def artifact_fingerprint(art: Mapping[str, Any]) -> str:
+    """Hash of an artifact's *deterministic* content.
+
+    Covers ``spec``/``spec_hash``/``columns``/``rows``/``result`` —
+    everything a resumed campaign must reproduce bit-identically —
+    and excludes ``provenance`` (wall time, throughput, retry counts
+    are measurements of the run, not of the result).  A kill+``--resume``
+    campaign and its uninterrupted twin have equal fingerprints.
+    """
+    content = {k: art.get(k) for k in
+               ("schema", "kind", "spec", "spec_hash", "columns",
+                "rows", "result")}
+    return spec_hash(content)
 
 
 def artifact_v1(kind: str, spec: Mapping[str, Any],
@@ -151,6 +195,14 @@ def validate_artifact(art: Mapping[str, Any]) -> Dict[str, Any]:
     prov = art.get("provenance")
     _require(isinstance(prov, Mapping) and "tool" in prov,
              "provenance.tool missing")
+    failures = prov.get("failures", [])
+    _require(isinstance(failures, list), "provenance.failures is not a "
+             "list")
+    for i, f in enumerate(failures):
+        _require(isinstance(f, Mapping), f"failures[{i}] is not a mapping")
+        for k in FAILURE_ROW_KEYS:
+            _require(k in f, f"failures[{i}]: missing failure-row "
+                     f"key {k!r}")
     _require(art.get("columns") == list(AGG_COLUMNS),
              f"columns {art.get('columns')!r} != canonical {AGG_COLUMNS}")
     rows = art.get("rows")

@@ -55,6 +55,17 @@ def _add_sim_flags(ap: argparse.ArgumentParser,
                     help="dotted-path override, e.g. prefetch.degree=3 "
                          "or ta.low_utility=0.2 (repeatable)")
     ap.add_argument("--out", default=None, help="artifact path override")
+    ap.add_argument("--retries", type=int, default=None,
+                    help="retry budget per cell (default 2); transient "
+                         "failures back off exponentially with jitter")
+    ap.add_argument("--cell-timeout", type=float, default=None,
+                    help="explicit per-cell wall-clock deadline in "
+                         "seconds (the adaptive rolling-median deadline "
+                         "applies regardless)")
+    ap.add_argument("--resume", action="store_true",
+                    help="resume an interrupted campaign from its "
+                         "journal (artifacts/<kind>/"
+                         "<spec_hash>.journal.jsonl)")
     if preset_flag:
         ap.add_argument("--preset", default=None,
                         help="run one hierarchy preset instead of the "
@@ -98,6 +109,9 @@ def run_table(scale: float, engine: str = "soa", native: bool = True,
               preset: Optional[str] = None,
               overrides: Optional[Dict[str, Any]] = None,
               out: Optional[str] = None,
+              retries: Optional[int] = None,
+              cell_timeout: Optional[float] = None,
+              resume: bool = False,
               tool: str = "python -m repro table") -> Dict[str, Any]:
     """The `repro table` body — also the programmatic front door."""
     from repro.api.runner import Runner
@@ -114,11 +128,20 @@ def run_table(scale: float, engine: str = "soa", native: bool = True,
     exp = Experiment(name=name, hierarchies=hierarchies, scale=scale,
                      engine=engine, native=native, processes=processes)
     t0 = time.time()
-    art = Runner(processes=processes).run(exp, kind="table", tool=tool)
+    runner = Runner(processes=processes, cell_timeout=cell_timeout,
+                    **({} if retries is None else {"retries": retries}))
+    art = runner.run(exp, kind="table", tool=tool,
+                     journal_dir=ARTIFACTS / "table", resume=resume)
     aggregates = art["result"]["aggregates"]
     _print_aggregate_table(aggregates)
 
-    if tuple(aggregates) == LADDER and len(exp.workloads) == 3:
+    degraded = art["result"].get("degraded")
+    if degraded:
+        print(f"[repro] WARNING: degraded campaign — failed cells "
+              f"{degraded}; skipping the paper comparison "
+              f"(provenance.failures has the structured rows)",
+              file=sys.stderr)
+    elif tuple(aggregates) == LADDER and len(exp.workloads) == 3:
         # full ladder × full suite: trend verdict + full-scale hard
         # gate + paper comparison (one definition in core.calibration)
         report_vs_paper(aggregates, scale, engine=engine,
@@ -132,7 +155,8 @@ def cmd_table(args: argparse.Namespace) -> int:
     run_table(_resolve_scale(args), engine=args.engine,
               native=not args.no_native, processes=args.processes,
               preset=args.preset, overrides=parse_set(args.sets) or None,
-              out=args.out)
+              out=args.out, retries=args.retries,
+              cell_timeout=args.cell_timeout, resume=args.resume)
     return 0
 
 
@@ -142,23 +166,42 @@ def cmd_table(args: argparse.Namespace) -> int:
 def run_sweep(scale: float, axes: Dict[str, list], tag: str,
               engine: str = "soa", native: bool = True,
               processes: Optional[int] = None, out: Optional[str] = None,
+              retries: Optional[int] = None,
+              cell_timeout: Optional[float] = None,
+              resume: bool = False,
               tool: str = "python -m repro sweep") -> Dict[str, Any]:
     """Grid sweep of the four-row ladder; writes an ArtifactV1 whose
     ``result`` is the full sweep payload (points, Pareto front,
-    recommended retune)."""
-    from repro.api.schema import AGG_COLUMNS, artifact_v1
+    recommended retune).
+
+    The campaign journals under ``artifacts/sweep/<spec_hash>
+    .journal.jsonl``; an interrupted run restarts with ``resume=True``
+    and yields an artifact whose deterministic content (fingerprint) is
+    bit-identical to an uninterrupted run.
+    """
+    from repro.api.schema import (AGG_COLUMNS, artifact_fingerprint,
+                                  artifact_v1, spec_hash)
     from repro.sweep.driver import run_ladder_sweep
     from repro.sweep.grid import enumerate_grid, grid_size
 
     points = enumerate_grid(axes)
+    spec = {"name": tag, "grid": {k: list(v) for k, v in axes.items()},
+            "scale": scale, "engine": engine, "native": native}
+    journal_path = (ARTIFACTS / "sweep"
+                    / f"{spec_hash(spec)[7:19]}.journal.jsonl")
     print(f"[sweep] {grid_size(axes)} points × 4-row ladder @ "
           f"scale={scale}, engine={engine}")
     t0 = time.time()
     payload = run_ladder_sweep(points, scale=scale, engine=engine,
-                               processes=processes, native=native)
+                               processes=processes, native=native,
+                               retries=retries, cell_timeout=cell_timeout,
+                               journal_path=journal_path, resume=resume)
     dt = time.time() - t0
-    payload["axes"] = {k: list(v) for k, v in axes.items()}
-    payload["wall_s"] = round(dt, 1)
+    # failures and wall time are measurements of the run, not the
+    # result — they live in provenance so resumed artifacts fingerprint
+    # identically to uninterrupted ones
+    failures = payload.pop("failures", [])
+    payload["axes"] = spec["grid"]
 
     n_front = len(payload["pareto_front"])
     print(f"[sweep] {payload['n_points']} ladders "
@@ -179,17 +222,29 @@ def run_sweep(scale: float, axes: Dict[str, list], tag: str,
     else:
         print("[sweep] no trend-restoring point in this grid")
 
+    # degraded points have no complete tensor_aware row — they cannot
+    # appear as metric rows (the validator requires finite values);
+    # they stay in result.points marked degraded_rows
     rows = [{"label": r["label"], "trend_ok": r["trend_ok"],
              "pareto": r["pareto"],
              **{m: r["rows"]["tensor_aware"][m] for m in AGG_COLUMNS}}
-            for r in payload["points"]]
-    spec = {"name": tag, "grid": payload["axes"], "scale": scale,
-            "engine": engine, "native": native}
+            for r in payload["points"] if "degraded_rows" not in r]
+    provenance = {"tool": tool, "engine": engine,
+                  "wall_s": round(dt, 2),
+                  "created_unix": int(time.time())}
+    if failures:
+        provenance["failures"] = failures
+        print(f"[sweep] WARNING: degraded campaign — "
+              f"{payload['n_degraded_points']} point(s) incomplete, "
+              f"{len(failures)} cell(s) permanently failed "
+              f"(provenance.failures has the structured rows)",
+              file=sys.stderr)
     art = artifact_v1("sweep", spec, rows, result=payload,
-                      provenance={"tool": tool, "engine": engine,
-                                  "wall_s": round(dt, 2),
-                                  "created_unix": int(time.time())})
+                      provenance=provenance)
+    art["provenance"]["fingerprint"] = artifact_fingerprint(art)
     _write_artifact(art, ARTIFACTS / "sweep" / f"sweep_{tag}.json", out)
+    if journal_path.exists() and not failures:
+        journal_path.unlink()     # campaign complete: journal retired
     return art
 
 
@@ -211,7 +266,8 @@ def cmd_sweep(args: argparse.Namespace) -> int:
            else "smoke" if args.smoke else f"scale{scale:g}")
     art = run_sweep(scale, axes, tag, engine=args.engine,
                     native=not args.no_native, processes=args.processes,
-                    out=args.out)
+                    out=args.out, retries=args.retries,
+                    cell_timeout=args.cell_timeout, resume=args.resume)
     if args.smoke:
         # acceptance gate: every grid point evaluated, every ladder row
         # carries finite positive metrics (a NaN/garbage regression in
@@ -417,7 +473,14 @@ def main(argv: Optional[List[str]] = None) -> int:
     b.set_defaults(func=cmd_bench)
 
     args = ap.parse_args(argv)
-    return args.func(args)
+    from repro.api.runner import RunnerInterrupted
+    try:
+        return args.func(args)
+    except RunnerInterrupted as e:
+        hint = (f" — resume with --resume (journal: {e.journal_path})"
+                if e.journal_path else "")
+        print(f"[repro] interrupted: {e}{hint}", file=sys.stderr)
+        return 130
 
 
 if __name__ == "__main__":

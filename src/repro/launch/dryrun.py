@@ -572,6 +572,12 @@ def main(argv: Optional[List[str]] = None) -> None:
 
     if args.plan:
         results = Runner().map(plan_cell_pass, cells, label="plan")
+        for r in results:
+            if r["status"] == "error":
+                # the structured failure row carries the full traceback
+                print(f"[plan] cell {r['item']} failed after "
+                      f"{r['attempts']} attempt(s): {r['error']}",
+                      file=sys.stderr)
         n_err = sum(1 for r in results
                     if r["status"] == "error"
                     or r["value"].get("status") == "error")

@@ -34,6 +34,13 @@ def main(argv=None) -> None:
                     help="fraction of KV pages resident in the HBM tier "
                          "(default: RunConfig.hbm_kv_budget_frac); the "
                          "rest demotes to the host-DRAM pool")
+    ap.add_argument("--ttl-steps", type=int, default=None,
+                    help="per-request residency bound in engine steps; "
+                         "a request that has not finished within it is "
+                         "dropped (pages freed, counted in stats) "
+                         "instead of spinning its slot forever")
+    ap.add_argument("--eos-id", type=int, default=None,
+                    help="token id that ends a request early")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch, smoke=True)
@@ -42,7 +49,9 @@ def main(argv=None) -> None:
     engine = ServingEngine(cfg, rc, params, batch_slots=args.slots,
                            max_seq=args.prompt_len + args.max_new + 8,
                            page_size=args.page_size,
-                           hbm_frac=args.hbm_frac)
+                           hbm_frac=args.hbm_frac,
+                           eos_id=args.eos_id,
+                           request_ttl_steps=args.ttl_steps)
     rng = np.random.default_rng(args.seed)
     for rid in range(args.requests):
         shape = ((args.prompt_len, cfg.n_codebooks)
@@ -54,8 +63,12 @@ def main(argv=None) -> None:
         print(f"[serve] req {req.req_id}: {len(req.out_tokens)} tokens "
               f"{req.out_tokens[:8]}...")
     pg = engine.pages
+    st = engine.stats
     print(f"[serve] {len(done)}/{args.requests} done in {engine.steps} "
           f"engine steps; page stats: {pg.stats}")
+    if st["dropped"]:
+        print(f"[serve] dropped {st['dropped']} request(s) "
+              f"{st['dropped_ids']} (TTL/step-budget)")
     print(f"[serve] KV tiers: HBM {pg.hbm.n_pages - pg.hbm.n_free}/"
           f"{pg.hbm.n_pages} pages in use, host "
           f"{pg.host.n_pages - pg.host.n_free}/{pg.host.n_pages} — "

@@ -1,0 +1,208 @@
+"""Deterministic fault injection for the Runner — chaos you can replay.
+
+A :class:`FaultSpec` is a seeded description of *which cells fail and
+how*: per-cell probabilities for five fault kinds, each decided by a
+pure hash of ``(seed, cell_key, attempt)`` so the schedule is a
+mathematical function of the spec — independent of worker count,
+dispatch order, wall clock, or platform.  Running the same campaign
+twice under the same spec injects byte-identical faults; that is what
+lets the chaos CI gate assert recovery instead of merely observing it.
+
+Fault kinds (``FAULT_KINDS``):
+
+* ``crash``   — raise :class:`ChaosFault` inside the cell (a transient
+  in-process failure; the retry path must absorb it);
+* ``hang``    — sleep ``hang_s`` (must be reaped by the per-cell
+  deadline; exercises the StragglerMonitor-derived timeout);
+* ``slow``    — sleep ``slow_s`` then complete normally (a straggler
+  that must NOT be counted as a failure);
+* ``corrupt`` — complete but return a metrics row with a non-finite
+  value (the coordinator's row validation must catch and retry it);
+* ``oom``     — ``os._exit(137)``: the worker process dies as if
+  OOM-killed; the coordinator must requeue its in-flight cell.
+
+``max_faults`` bounds how many attempts of one cell may be faulted
+(default 1: the retry is always clean, so a chaos campaign with
+``retries >= 1`` provably converges).  ``max_faults=None`` removes the
+bound — with a probability of 1.0 that manufactures *permanent*
+failures for the graceful-degradation path.
+
+``kill_after_cells`` is the campaign-level fault: the *coordinator*
+hard-exits (``os._exit(137)``, indistinguishable from ``kill -9``)
+after journaling that many completed cells — the deterministic way to
+stage a kill-and-``--resume`` drill.
+
+The spec travels to spawn workers through the ``REPRO_CHAOS``
+environment variable as JSON (:meth:`to_env` / :meth:`from_env`), so
+any ``repro table|sweep|plan|bench`` run can be chaos-tested without
+code changes::
+
+    REPRO_CHAOS='{"seed": 7, "p_crash": 0.2, "max_faults": 1}' \
+        python -m repro sweep --smoke --retries 3
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import math
+import os
+import time
+from typing import Any, Dict, List, Mapping, Optional, Sequence, Tuple
+
+ENV_VAR = "REPRO_CHAOS"
+
+FAULT_KINDS = ("crash", "hang", "slow", "corrupt", "oom")
+
+
+class ChaosFault(RuntimeError):
+    """An injected (not organic) cell failure."""
+
+
+def _unit_hash(*parts: Any) -> float:
+    """Pure uniform draw in [0, 1) from the parts — the determinism core."""
+    blob = "|".join(str(p) for p in parts).encode()
+    h = hashlib.sha256(blob).digest()
+    return int.from_bytes(h[:8], "big") / 2.0 ** 64
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultSpec:
+    """Seeded, per-cell fault schedule (see module docstring)."""
+
+    seed: int = 0
+    p_crash: float = 0.0
+    p_hang: float = 0.0
+    p_slow: float = 0.0
+    p_corrupt: float = 0.0
+    p_oom: float = 0.0
+    hang_s: float = 300.0
+    slow_s: float = 0.5
+    #: at most this many faulted attempts per cell (None = unbounded)
+    max_faults: Optional[int] = 1
+    #: coordinator hard-exit after N journal appends (kill-resume drills)
+    kill_after_cells: Optional[int] = None
+
+    def __post_init__(self) -> None:
+        for kind in FAULT_KINDS:
+            p = getattr(self, f"p_{kind}")
+            if not (isinstance(p, (int, float)) and 0.0 <= p <= 1.0):
+                raise ValueError(f"p_{kind} must be in [0, 1], got {p!r}")
+        total = sum(getattr(self, f"p_{kind}") for kind in FAULT_KINDS)
+        if total > 1.0 + 1e-9:
+            raise ValueError(f"fault probabilities sum to {total} > 1")
+
+    # -- the deterministic schedule ------------------------------------
+    def draw(self, cell_key: str, attempt: int) -> Optional[str]:
+        """Fault kind for (cell, attempt), or None — pure, replayable."""
+        if self.max_faults is not None and attempt >= self.max_faults:
+            return None
+        u = _unit_hash("fault", self.seed, cell_key, attempt)
+        acc = 0.0
+        for kind in FAULT_KINDS:
+            acc += getattr(self, f"p_{kind}")
+            if u < acc:
+                return kind
+        return None
+
+    def schedule(self, cell_keys: Sequence[str],
+                 attempts: int = 1) -> Dict[Tuple[str, int], str]:
+        """The full fault table for a campaign — what the determinism
+        test compares across FaultSpec instances."""
+        out: Dict[Tuple[str, int], str] = {}
+        for key in cell_keys:
+            for a in range(attempts):
+                kind = self.draw(key, a)
+                if kind is not None:
+                    out[(key, a)] = kind
+        return out
+
+    # -- worker-side application ---------------------------------------
+    def inject(self, cell_key: str, attempt: int,
+               in_worker: bool = True) -> Optional[str]:
+        """Apply the scheduled fault for this (cell, attempt) *before*
+        the cell body runs.  Raises / exits / sleeps as drawn; returns
+        the kind (``"corrupt"`` is applied by the caller to the finished
+        row via :meth:`corrupt_row`).
+
+        ``in_worker=False`` marks the serial (in-coordinator) executor:
+        a process-kill there would kill the whole campaign and a hang
+        has no reaper, so both degrade to a :class:`ChaosFault` — the
+        retry path still gets exercised, the schedule stays identical.
+        """
+        kind = self.draw(cell_key, attempt)
+        if kind == "crash":
+            raise ChaosFault(
+                f"injected crash: cell={cell_key} attempt={attempt}")
+        if kind == "oom":
+            if in_worker:
+                os._exit(137)      # the worker dies mid-cell, no cleanup
+            raise ChaosFault(f"injected oom-kill (inline executor): "
+                             f"cell={cell_key} attempt={attempt}")
+        if kind == "hang":
+            if not in_worker:
+                raise ChaosFault(f"injected hang (inline executor has "
+                                 f"no reaper): cell={cell_key} "
+                                 f"attempt={attempt}")
+            time.sleep(self.hang_s)
+        elif kind == "slow":
+            time.sleep(self.slow_s)
+        return kind
+
+    @staticmethod
+    def corrupt_row(row: Mapping[str, Any]) -> Dict[str, Any]:
+        """Return the row with its first numeric column made non-finite
+        (what a torn write / bad DMA would look like)."""
+        out = dict(row)
+        for k, v in out.items():
+            if isinstance(v, (int, float)) and not isinstance(v, bool):
+                out[k] = math.nan
+                break
+        return out
+
+    # -- env round-trip (spawn workers re-read the spec) ---------------
+    def to_env(self) -> str:
+        d = {k: v for k, v in dataclasses.asdict(self).items()
+             if v not in (None, 0, 0.0) or k == "seed"}
+        return json.dumps(d, sort_keys=True)
+
+    @classmethod
+    def from_json(cls, blob: str) -> "FaultSpec":
+        d = json.loads(blob)
+        if not isinstance(d, dict):
+            raise ValueError(f"{ENV_VAR} must be a JSON object, got {d!r}")
+        known = {f.name for f in dataclasses.fields(cls)}
+        unknown = set(d) - known
+        if unknown:
+            raise ValueError(f"{ENV_VAR}: unknown keys {sorted(unknown)} "
+                             f"(known: {sorted(known)})")
+        return cls(**d)
+
+    @classmethod
+    def from_env(cls, environ: Optional[Mapping[str, str]] = None,
+                 ) -> Optional["FaultSpec"]:
+        """The active spec from ``REPRO_CHAOS``, or None (no chaos)."""
+        blob = (environ if environ is not None else os.environ).get(ENV_VAR)
+        if not blob:
+            return None
+        return cls.from_json(blob)
+
+    def as_dict(self) -> Dict[str, Any]:
+        return dataclasses.asdict(self)
+
+
+def backoff_delay(base_s: float, attempt: int, cell_key: str,
+                  cap_s: float = 5.0) -> float:
+    """Exponential backoff with deterministic jitter.
+
+    ``base * 2^(attempt-1)`` scaled by a ±25 % jitter drawn from a pure
+    hash of the cell key and attempt — retries de-synchronize across
+    cells (no thundering herd) yet the same campaign replays the same
+    delays.
+    """
+    if attempt <= 0:
+        return 0.0
+    raw = base_s * (2.0 ** (attempt - 1))
+    jitter = 0.75 + 0.5 * _unit_hash("backoff", cell_key, attempt)
+    return min(cap_s, raw * jitter)

@@ -34,13 +34,20 @@ class Request:
     max_new_tokens: int
     out_tokens: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
+    #: the request was evicted (TTL expiry / step-budget drain), not
+    #: completed — its partial output is still in out_tokens
+    dropped: bool = False
+    #: engine step at which the request was admitted (prefilled)
+    born_step: Optional[int] = None
 
 
 class ServingEngine:
     def __init__(self, cfg: ModelConfig, rc: RunConfig, params,
                  batch_slots: int = 4, max_seq: int = 512,
                  greedy: bool = True, page_size: Optional[int] = None,
-                 hbm_frac: Optional[float] = None):
+                 hbm_frac: Optional[float] = None,
+                 eos_id: Optional[int] = None,
+                 request_ttl_steps: Optional[int] = None):
         self.cfg = cfg
         self.rc = rc
         self.params = params
@@ -68,6 +75,14 @@ class ServingEngine:
             hbm_budget_pages=hbm_pages,
             host_budget_pages=max(total - hbm_pages, 0) + 4 * total)
         self.steps = 0
+        # liveness: a request that never samples EOS (e.g. decoding off
+        # a corrupted KV page) must not spin its slot forever —
+        # request_ttl_steps bounds its residency, and anything still
+        # live when the step budget runs out is drained, not lost
+        self.eos_id = eos_id
+        self.request_ttl_steps = request_ttl_steps
+        self.dropped: List[Request] = []
+        self.n_finished = 0
 
     # -- API --------------------------------------------------------------------
     def submit(self, req: Request) -> None:
@@ -79,7 +94,25 @@ class ServingEngine:
             self._fill_slots()
             self._decode_once(finished)
             self.steps += 1
+        # drain: requests still resident (or queued) when the step
+        # budget runs out are dropped with their pages freed and
+        # counted in stats — never silently leaked
+        for slot in range(self.slots):
+            if self.active[slot] is not None:
+                self._drop(slot)
+        while self.queue:
+            req = self.queue.pop(0)
+            req.dropped = True
+            self.dropped.append(req)
         return finished
+
+    @property
+    def stats(self) -> Dict[str, object]:
+        """Liveness counters: completed vs dropped requests."""
+        return {"finished": self.n_finished,
+                "dropped": len(self.dropped),
+                "dropped_ids": [r.req_id for r in self.dropped],
+                "steps": self.steps}
 
     # -- internals -----------------------------------------------------------------
     def _sample(self, logits: jax.Array) -> int:
@@ -93,6 +126,7 @@ class ServingEngine:
             if self.active[slot] is not None or not self.queue:
                 continue
             req = self.queue.pop(0)
+            req.born_step = self.steps
             toks = jnp.asarray(req.prompt)[None]
             logits, cache = self.prefill(self.params, toks)
             for t in range(len(req.prompt)):
@@ -101,11 +135,39 @@ class ServingEngine:
             req.out_tokens.append(first)
             self.active[slot] = req
             self.caches[slot] = cache
+            if self.eos_id is not None and first == self.eos_id:
+                req.done = True       # EOS at prefill: finish w/o decode
+
+    def _finish(self, slot: int, finished: List[Request]) -> None:
+        req = self.active[slot]
+        req.done = True
+        finished.append(req)
+        self.n_finished += 1
+        self.pages.free_seq(req.req_id)
+        self.active[slot] = None
+        self.caches[slot] = None
+
+    def _drop(self, slot: int) -> None:
+        req = self.active[slot]
+        req.dropped = True
+        self.dropped.append(req)
+        self.pages.free_seq(req.req_id)
+        self.active[slot] = None
+        self.caches[slot] = None
 
     def _decode_once(self, finished: List[Request]) -> None:
         for slot in range(self.slots):
             req = self.active[slot]
             if req is None:
+                continue
+            if req.done:              # EOS sampled at prefill
+                self._finish(slot, finished)
+                continue
+            if (self.request_ttl_steps is not None
+                    and req.born_step is not None
+                    and self.steps - req.born_step
+                    >= self.request_ttl_steps):
+                self._drop(slot)      # TTL expiry: evict, free pages
                 continue
             self.pages.prefetch_for_decode(req.req_id)
             last = req.out_tokens[-1]
@@ -119,10 +181,7 @@ class ServingEngine:
             req.out_tokens.append(nxt)
             self.caches[slot] = cache
             total = len(req.prompt) + len(req.out_tokens)
-            if (len(req.out_tokens) >= req.max_new_tokens
+            if ((self.eos_id is not None and nxt == self.eos_id)
+                    or len(req.out_tokens) >= req.max_new_tokens
                     or total >= self.max_seq - 1):
-                req.done = True
-                finished.append(req)
-                self.pages.free_seq(req.req_id)
-                self.active[slot] = None
-                self.caches[slot] = None
+                self._finish(slot, finished)

@@ -21,8 +21,11 @@ trace reuse, native-kernel detection, failure isolation) shared with
 
 from __future__ import annotations
 
+import sys
+from pathlib import Path
 from typing import Any, Dict, List, Mapping, Optional, Sequence, Tuple
 
+from repro.api.schema import AGG_COLUMNS
 from repro.api.schema import LADDER  # noqa: F401  (canonical row order)
 from repro.core.calibration import trend_ok
 from repro.core.params import SystemParams
@@ -36,20 +39,30 @@ def run_config_sweep(configs: Sequence[SystemParams], scale: float = 1.0,
                      processes: Optional[int] = None,
                      native: bool = True,
                      workloads: Optional[Sequence[str]] = None,
-                     ) -> List[Dict[str, Any]]:
+                     strict: bool = True,
+                     retries: Optional[int] = None,
+                     cell_timeout: Optional[float] = None,
+                     journal_path: Optional[Path] = None,
+                     resume: bool = False) -> List[Dict[str, Any]]:
     """Run every config over the workload suite; one aggregate per config.
 
     Returns, in input order::
 
         {"name": ..., "aggregate": {latency_ns, bandwidth_gbps, hit_rate,
          energy_uj, per_workload}, "accesses_per_sec": {workload: rate}}
+
+    The resilience knobs (``retries`` / ``cell_timeout`` /
+    ``journal_path`` + ``resume`` / ``strict=False`` degradation) pass
+    straight through to ``Runner.run_configs``.
     """
     # lazy: this module loads with the sweep package __init__; the
     # Runner (and its multiprocessing machinery) only at execution time
     from repro.api.runner import Runner
     return Runner(processes=processes).run_configs(
         configs, workloads=workloads, scale=scale, engine=engine,
-        native=native)
+        native=native, strict=strict, retries=retries,
+        cell_timeout=cell_timeout, journal_path=journal_path,
+        resume=resume)
 
 
 def _split_overrides(point: Mapping[str, Any]) -> Tuple[Dict, Dict]:
@@ -66,7 +79,11 @@ def run_ladder_sweep(points: Sequence[Mapping[str, Any]],
                      scale: float = 1.0, engine: str = "soa",
                      processes: Optional[int] = None,
                      native: bool = True,
-                     objectives=OBJECTIVES) -> Dict[str, Any]:
+                     objectives=OBJECTIVES,
+                     retries: Optional[int] = None,
+                     cell_timeout: Optional[float] = None,
+                     journal_path: Optional[Path] = None,
+                     resume: bool = False) -> Dict[str, Any]:
     """Evaluate the paper's four-row ladder for every grid point.
 
     Returns an artifact-shaped dict: per point the four row aggregates,
@@ -75,6 +92,12 @@ def run_ladder_sweep(points: Sequence[Mapping[str, Any]],
     trend-passing Pareto member with the highest hit rate (hit rate is
     the regressed metric this explorer exists to fix), latency as the
     tie-break.
+
+    Degradation policy: cells the Runner could not complete (after its
+    retry budget) do NOT abort the sweep — every ladder point touching
+    a failed config is marked ``degraded_rows``, forced trend-fail, and
+    excluded from the Pareto front; the structured failure rows surface
+    in the payload's ``failures`` for artifact provenance.
     """
     # -- dedupe configs across ladders ----------------------------------
     cfgs: List[SystemParams] = [BASELINE, SHARED_L3]
@@ -91,7 +114,19 @@ def run_ladder_sweep(points: Sequence[Mapping[str, Any]],
         ladders.append((point, cfg_index[sp_pf], cfg_index[sp_ta]))
 
     results = run_config_sweep(cfgs, scale=scale, engine=engine,
-                               processes=processes, native=native)
+                               processes=processes, native=native,
+                               strict=False, retries=retries,
+                               cell_timeout=cell_timeout,
+                               journal_path=journal_path, resume=resume)
+
+    # structured failure rows, deduped (aliased configs share them)
+    failures: List[Dict[str, Any]] = []
+    seen = set()
+    for res in results:
+        for wl, fr in res.get("errors", {}).items():
+            if (fr["config_hash"], wl) not in seen:
+                seen.add((fr["config_hash"], wl))
+                failures.append(fr)
 
     def _agg(i: int) -> Dict[str, float]:
         return {k: v for k, v in results[i]["aggregate"].items()
@@ -102,15 +137,29 @@ def run_ladder_sweep(points: Sequence[Mapping[str, Any]],
     for point, pf_i, ta_i in ladders:
         ladder = {"baseline": _agg(0), "shared_l3": _agg(1),
                   "prefetch": _agg(pf_i), "tensor_aware": _agg(ta_i)}
-        rows_out.append({
+        degraded = sorted(name for name, agg in ladder.items()
+                          if any(c not in agg for c in AGG_COLUMNS))
+        row = {
             "point": dict(point),
             "label": point_label(point),
             "rows": ladder,
-            "trend_ok": trend_ok(ladder),
-        })
+            "trend_ok": False if degraded else trend_ok(ladder),
+        }
+        if degraded:
+            row["degraded_rows"] = degraded
+            print(f"[sweep] point {row['label']}: ladder rows "
+                  f"{degraded} incomplete (cells permanently failed) — "
+                  f"excluded from Pareto/trend", file=sys.stderr)
+        rows_out.append(row)
         ta_rows.append(ladder["tensor_aware"])
 
-    front = pareto_front(ta_rows, objectives)
+    # Pareto only over fully-evaluated points (a degraded tensor_aware
+    # row has no comparable metrics)
+    ok_idx = [i for i, r in enumerate(rows_out)
+              if "degraded_rows" not in r]
+    front = sorted(ok_idx[j] for j in
+                   pareto_front([ta_rows[i] for i in ok_idx],
+                                objectives)) if ok_idx else []
     for i, r in enumerate(rows_out):
         r["pareto"] = i in front
 
@@ -136,5 +185,7 @@ def run_ladder_sweep(points: Sequence[Mapping[str, Any]],
         "points": rows_out,
         "pareto_front": front,
         "n_trend_ok": sum(r["trend_ok"] for r in rows_out),
+        "n_degraded_points": len(rows_out) - len(ok_idx),
         "recommended": recommended,
+        "failures": failures,
     }

@@ -231,6 +231,81 @@ class TestRunner:
         assert "errors" not in res[0]
         assert "cnn" in res[1]["errors"]
 
+    def test_organic_failure_row_is_structured(self):
+        """Organic (non-chaos) failures ride the same structured
+        failure-row path as injected ones."""
+        res = Runner(processes=1, retries=1, backoff_s=0.01).run_configs(
+            [self._bad_config()], workloads=["cnn"], scale=TINY,
+            strict=False)
+        fr = res[0]["errors"]["cnn"]
+        assert set(schema_mod.FAILURE_ROW_KEYS) <= set(fr)
+        assert fr["attempts"] == 2            # organic errors retry too
+        assert fr["fault"] is None            # …but are not chaos
+        assert "Traceback" in fr["traceback"]
+
+    def test_chaos_env_var_reaches_the_runner(self, monkeypatch):
+        """REPRO_CHAOS alone chaos-tests any run — no code changes."""
+        from repro.runtime.chaos import FaultSpec
+        clean = Runner(processes=1).run_configs(
+            [PRESETS["baseline"]], workloads=["cnn"], scale=TINY)
+        monkeypatch.setenv(
+            "REPRO_CHAOS",
+            FaultSpec(seed=3, p_crash=1.0, max_faults=1).to_env())
+        r = Runner(processes=1, retries=1, backoff_s=0.01)
+        res = r.run_configs([PRESETS["baseline"]], workloads=["cnn"],
+                            scale=TINY)
+        assert res[0]["rows"] == clean[0]["rows"]
+        assert r.last_stats["retried"] >= 1   # the env spec was honored
+        assert r.last_stats["chaos"]["p_crash"] == 1.0
+
+
+class TestResilienceProvenance:
+    """The artifact side of the hardened Runner: resilience counters
+    travel in provenance, and the fingerprint ignores them."""
+
+    @pytest.fixture(scope="class")
+    def tiny_artifact(self):
+        exp = Experiment(name="tiny", workloads=("cnn",), scale=TINY,
+                         processes=1)
+        return Runner().run(exp, kind="table")
+
+    def test_provenance_carries_resilience_and_fingerprint(
+            self, tiny_artifact):
+        prov = tiny_artifact["provenance"]
+        res = prov["resilience"]
+        assert res["cells"] == 4 and res["failed"] == 0
+        assert {"retried", "timeouts", "worker_deaths",
+                "resumed"} <= set(res)
+        assert prov["fingerprint"] == schema_mod.artifact_fingerprint(
+            tiny_artifact)
+
+    def test_fingerprint_ignores_volatile_provenance(self, tiny_artifact):
+        art = json.loads(json.dumps(tiny_artifact))
+        art["provenance"]["wall_s"] = 9999.0
+        art["provenance"]["created_unix"] = 0
+        art["provenance"]["resilience"] = {"resumed": 3}
+        assert (schema_mod.artifact_fingerprint(art)
+                == tiny_artifact["provenance"]["fingerprint"])
+
+    def test_fingerprint_tracks_rows(self, tiny_artifact):
+        art = json.loads(json.dumps(tiny_artifact))
+        art["rows"][0]["hit_rate"] = 0.123456
+        assert (schema_mod.artifact_fingerprint(art)
+                != tiny_artifact["provenance"]["fingerprint"])
+
+    def test_failure_row_shape_is_pinned(self):
+        fr = schema_mod.failure_row("cfg", "ab12", "cnn", "Boom: x",
+                                    traceback_text="tb", attempts=3,
+                                    duration_s=0.5, fault="crash")
+        assert tuple(fr) == schema_mod.FAILURE_ROW_KEYS
+
+    def test_validate_rejects_malformed_failures(self, tiny_artifact):
+        art = json.loads(json.dumps(tiny_artifact))
+        art["provenance"]["failures"] = [{"config": "x"}]  # missing keys
+        with pytest.raises(schema_mod.ArtifactError,
+                           match="failure"):
+            schema_mod.validate_artifact(art)
+
 
 # ---------------------------------------------------------------------------
 # CLI subprocess smoke + deprecation shims

@@ -74,3 +74,77 @@ def test_batched_requests_independent(setup):
     together = run([p1, p2])
     alone1 = run([p1])
     assert together[0] == alone1[0]
+
+
+# ---------------------------------------------------------------------------
+# liveness: TTL eviction, EOS stop, step-budget drain (PR-6 resilience)
+# ---------------------------------------------------------------------------
+def test_ttl_expired_request_dropped_not_leaked(setup):
+    cfg, rc, params = setup
+    rng = np.random.default_rng(3)
+    prompt = rng.integers(0, cfg.vocab_size, size=6, dtype=np.int32)
+    # eos_id outside the vocab ⇒ never sampled; without the TTL this
+    # request would decode its full budget — the TTL drops it first
+    engine = ServingEngine(cfg, rc, params, batch_slots=1, max_seq=64,
+                           eos_id=cfg.vocab_size + 1,
+                           request_ttl_steps=3)
+    engine.submit(Request(0, prompt, max_new_tokens=40))
+    done = engine.run()
+    assert done == []
+    assert engine.stats["dropped"] == 1
+    assert engine.stats["dropped_ids"] == [0]
+    assert engine.stats["finished"] == 0
+    req = engine.dropped[0]
+    assert req.dropped and not req.done
+    assert 0 < len(req.out_tokens) < 40     # partial output retained
+    assert engine.pages.hbm.n_free == engine.pages.hbm.n_pages
+
+
+def test_eos_stops_decode_early(setup):
+    cfg, rc, params = setup
+    rng = np.random.default_rng(4)
+    prompt = rng.integers(0, cfg.vocab_size, size=8, dtype=np.int32)
+
+    def run(eos_id):
+        e = ServingEngine(cfg, rc, params, batch_slots=1, max_seq=32,
+                          eos_id=eos_id)
+        e.submit(Request(0, prompt, max_new_tokens=6))
+        return e.run()[0].out_tokens
+
+    free = run(None)                        # greedy, no EOS: 6 tokens
+    assert len(free) == 6
+    stopped = run(free[2])                  # 3rd token becomes EOS
+    # greedy output may repeat a token, so stop at its FIRST occurrence
+    assert stopped == free[:free.index(free[2]) + 1]
+    assert len(stopped) <= 3                # EOS token kept, then stop
+
+
+def test_step_budget_drains_queue_and_slots(setup):
+    cfg, rc, params = setup
+    rng = np.random.default_rng(5)
+    engine = ServingEngine(cfg, rc, params, batch_slots=1, max_seq=64)
+    for rid in range(3):
+        prompt = rng.integers(0, cfg.vocab_size, size=6, dtype=np.int32)
+        engine.submit(Request(rid, prompt, max_new_tokens=50))
+    done = engine.run(max_steps=4)
+    # slot 0 was mid-decode, requests 1-2 never left the queue: all
+    # three must surface in stats, none silently lost
+    assert done == []
+    assert engine.stats["dropped"] == 3
+    assert sorted(engine.stats["dropped_ids"]) == [0, 1, 2]
+    assert engine.stats["finished"] == 0
+    assert not engine.queue and not any(engine.active)
+    assert engine.pages.hbm.n_free == engine.pages.hbm.n_pages
+
+
+def test_stats_counts_finished(setup):
+    cfg, rc, params = setup
+    rng = np.random.default_rng(6)
+    engine = ServingEngine(cfg, rc, params, batch_slots=2, max_seq=32)
+    for rid in range(3):
+        prompt = rng.integers(0, cfg.vocab_size, size=6, dtype=np.int32)
+        engine.submit(Request(rid, prompt, max_new_tokens=3))
+    done = engine.run()
+    assert len(done) == 3
+    assert engine.stats["finished"] == 3
+    assert engine.stats["dropped"] == 0
