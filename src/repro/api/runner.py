@@ -265,7 +265,7 @@ class Runner:
                     retries: Optional[int] = None,
                     cell_timeout: Optional[float] = None,
                     journal_path: Optional[Path] = None,
-                    resume: bool = False,
+                    resume: bool = False, backend: str = "pool",
                     ) -> List[Dict[str, Any]]:
         """Run every config over the workload suite.
 
@@ -382,7 +382,11 @@ class Runner:
         try:
             if to_run:
                 common = (scale, engine, native)
-                if processes > 1 and len(to_run) > 1:
+                if backend == "batched":
+                    self._execute_batched(to_run, common, retries, chaos,
+                                          outcomes, on_ok, preempt,
+                                          stats, journal_path, len(cells))
+                elif processes > 1 and len(to_run) > 1:
                     self._execute_pool(to_run, common, processes,
                                        retries, cell_timeout, chaos,
                                        outcomes, on_ok, preempt, stats,
@@ -540,6 +544,97 @@ class Runner:
             if self.progress:
                 print(f"[runner] {len(outcomes)}/{n_cells} cells done",
                       file=sys.stderr)
+
+    def _execute_batched(self, cells: List[Dict], common: Tuple,
+                         retries: int, chaos: Optional[FaultSpec],
+                         outcomes: Dict, on_ok: Callable,
+                         preempt: Optional[PreemptionHandler],
+                         stats: Dict, journal_path: Optional[Path],
+                         n_cells: int) -> None:
+        """One vmapped jax device program per (workload × shape
+        bucket) instead of one process per cell.
+
+        The journal cell identity (``config_hash`` × workload) stays
+        the unit of resume: every lane of a batch lands as its own
+        journal row via the shared ``on_ok``, and chaos/retry are
+        consulted per cell per attempt — a cell whose fault schedule
+        fires this attempt is excluded from the batch and retried on
+        the next round, exactly as a pool worker crash would be.
+        """
+        from repro.core import engine_jax
+        scale, _engine, _native = common
+        remaining: List[Dict] = [
+            {"cell": cell, "attempt": 0} for cell in cells]
+        while remaining:
+            self._check_preempt(preempt, outcomes, journal_path, n_cells)
+            attempt_max = max(r["attempt"] for r in remaining)
+            if attempt_max:
+                time.sleep(max(backoff_delay(self.backoff_s,
+                                             r["attempt"],
+                                             r["cell"]["key"])
+                               for r in remaining))
+            # chaos gate: a cell whose schedule injects a fault this
+            # attempt errors out of the batch (catchable on the
+            # coordinator — in_worker=False degrades oom/hang)
+            runnable: List[Tuple[Dict, Optional[str]]] = []
+            errored: List[Tuple[Dict, str, str]] = []
+            for rec in remaining:
+                key = rec["cell"]["key"]
+                try:
+                    fault = chaos.inject(key, rec["attempt"],
+                                         in_worker=False) \
+                        if chaos is not None else None
+                    runnable.append((rec, fault))
+                except Exception as e:  # noqa: BLE001 — isolate the cell
+                    errored.append((rec, f"{type(e).__name__}: {e}",
+                                    traceback.format_exc()[-4000:]))
+            # one run_batch per workload; lanes grouped by shape bucket
+            by_wl: Dict[str, List[Tuple[Dict, Optional[str]]]] = {}
+            for item in runnable:
+                by_wl.setdefault(item[0]["cell"]["wl"], []).append(item)
+            for wl, group in by_wl.items():
+                self._check_preempt(preempt, outcomes, journal_path,
+                                    n_cells)
+                tr = _get_trace(wl, scale)
+                t0 = time.monotonic()
+                try:
+                    outs = engine_jax.run_batch(
+                        [rec["cell"]["sp"] for rec, _ in group], tr)
+                except Exception as e:  # noqa: BLE001 — retry the batch
+                    tb = traceback.format_exc()[-4000:]
+                    errored.extend((rec, f"{type(e).__name__}: {e}", tb)
+                                   for rec, _ in group)
+                    continue
+                wall = max(time.monotonic() - t0, 1e-9)
+                # aggregate throughput, attributed per lane
+                rate = len(tr["core"]) * len(group) / wall
+                for (rec, fault), (oi, od) in zip(group, outs):
+                    cell = rec["cell"]
+                    row = engine_jax.metrics_from_outputs(
+                        cell["sp"], tr, oi, od).row()
+                    if fault == "corrupt":
+                        row = chaos.corrupt_row(row)
+                    if _row_nonfinite(row):
+                        errored.append((rec, "corrupt row: non-finite "
+                                        "metrics", ""))
+                        continue
+                    outcomes[(cell["cfg_idx"], cell["wl"])] = {
+                        "status": "ok", "row": row, "rate": rate,
+                        "native": False, "attempts": rec["attempt"] + 1}
+                    on_ok(cell, row, rate, False, rec["attempt"] + 1)
+                if self.progress:
+                    print(f"[runner] batched {wl}: {len(group)} lanes "
+                          f"in {wall:.1f}s", file=sys.stderr)
+            remaining = []
+            for rec, error, tb in errored:
+                rec["attempt"] += 1
+                if rec["attempt"] > retries:
+                    self._permanent_failure(
+                        rec["cell"], rec["attempt"], error, tb,
+                        _fault_kind_of(error), 0.0, outcomes, stats)
+                else:
+                    stats["retried"] += 1
+                    remaining.append(rec)
 
     def _execute_pool(self, cells: List[Dict], common: Tuple,
                       processes: int, retries: int,
@@ -748,7 +843,7 @@ class Runner:
                                    native=exp.native, processes=procs,
                                    strict=False,
                                    journal_path=journal_path,
-                                   resume=resume)
+                                   resume=resume, backend=exp.backend)
         rows = [res["rows"][wl]
                 for res in results for wl in exp.workloads
                 if wl in res["rows"]]
@@ -779,9 +874,13 @@ class Runner:
                   f"permanently failed — artifact marks them in "
                   f"result.degraded / provenance.failures",
                   file=sys.stderr)
+        from repro.core.native import resolve_engine
         provenance = {
             "tool": tool,
             "engine": exp.engine,
+            "engine_resolved": ("jax" if exp.backend == "batched"
+                                else resolve_engine(exp.engine)),
+            "backend": exp.backend,
             "native_kernel": all(res["native"] for res in results
                                  if res["rows"]),
             "python": sys.version.split()[0],

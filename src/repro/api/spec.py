@@ -120,6 +120,10 @@ class Experiment:
     scale: float = 1.0
     native: bool = True
     processes: Optional[int] = None
+    #: execution strategy, not part of the result identity: "pool"
+    #: fans cells out over processes, "batched" routes whole config
+    #: batches through one vmapped jax device program
+    backend: str = "pool"
     #: artifact home (directory); None = caller handles persistence
     out_dir: Optional[str] = None
 
@@ -146,9 +150,14 @@ class Experiment:
                 raise SpecError(f"unknown workload {wl!r} "
                                 f"(known: {sorted(trace_mod.WORKLOADS)})")
         object.__setattr__(self, "workloads", wls)
-        if self.engine not in ("soa", "object"):
+        if self.engine not in ("reference", "object", "soa", "native",
+                               "jax"):
             raise SpecError(f"unknown engine {self.engine!r} "
-                            f"(known: soa, object)")
+                            f"(known: reference, object, soa, native, "
+                            f"jax)")
+        if self.backend not in ("pool", "batched"):
+            raise SpecError(f"unknown backend {self.backend!r} "
+                            f"(known: pool, batched)")
         if (not isinstance(self.scale, (int, float))
                 or isinstance(self.scale, bool)
                 or not math.isfinite(self.scale) or self.scale <= 0):

@@ -45,7 +45,14 @@ def _add_sim_flags(ap: argparse.ArgumentParser,
     ap.add_argument("--scale", type=float, default=None,
                     help=f"workload scale (default 1.0; {SMOKE_SCALE} "
                          f"under --smoke)")
-    ap.add_argument("--engine", default="soa", choices=["soa", "object"])
+    ap.add_argument("--engine", default="soa",
+                    choices=["reference", "object", "soa", "native",
+                             "jax"])
+    ap.add_argument("--backend", default="pool",
+                    choices=["pool", "batched"],
+                    help="execution backend: 'pool' fans cells out over "
+                         "worker processes; 'batched' runs whole config "
+                         "batches as one vmapped jax device program")
     ap.add_argument("--processes", type=int, default=None,
                     help="worker processes (default: auto)")
     ap.add_argument("--no-native", action="store_true",
@@ -111,7 +118,7 @@ def run_table(scale: float, engine: str = "soa", native: bool = True,
               out: Optional[str] = None,
               retries: Optional[int] = None,
               cell_timeout: Optional[float] = None,
-              resume: bool = False,
+              resume: bool = False, backend: str = "pool",
               tool: str = "python -m repro table") -> Dict[str, Any]:
     """The `repro table` body — also the programmatic front door."""
     from repro.api.runner import Runner
@@ -126,7 +133,8 @@ def run_table(scale: float, engine: str = "soa", native: bool = True,
         hierarchies = ladder_specs(overrides)
     name = f"scale{scale:g}" + (f"_{preset}" if preset else "")
     exp = Experiment(name=name, hierarchies=hierarchies, scale=scale,
-                     engine=engine, native=native, processes=processes)
+                     engine=engine, native=native, processes=processes,
+                     backend=backend)
     t0 = time.time()
     runner = Runner(processes=processes, cell_timeout=cell_timeout,
                     **({} if retries is None else {"retries": retries}))
@@ -156,7 +164,8 @@ def cmd_table(args: argparse.Namespace) -> int:
               native=not args.no_native, processes=args.processes,
               preset=args.preset, overrides=parse_set(args.sets) or None,
               out=args.out, retries=args.retries,
-              cell_timeout=args.cell_timeout, resume=args.resume)
+              cell_timeout=args.cell_timeout, resume=args.resume,
+              backend=args.backend)
     return 0
 
 
@@ -168,7 +177,7 @@ def run_sweep(scale: float, axes: Dict[str, list], tag: str,
               processes: Optional[int] = None, out: Optional[str] = None,
               retries: Optional[int] = None,
               cell_timeout: Optional[float] = None,
-              resume: bool = False,
+              resume: bool = False, backend: str = "pool",
               tool: str = "python -m repro sweep") -> Dict[str, Any]:
     """Grid sweep of the four-row ladder; writes an ArtifactV1 whose
     ``result`` is the full sweep payload (points, Pareto front,
@@ -185,17 +194,22 @@ def run_sweep(scale: float, axes: Dict[str, list], tag: str,
     from repro.sweep.grid import enumerate_grid, grid_size
 
     points = enumerate_grid(axes)
+    # engine/native/backend are execution strategy, not result identity:
+    # they live in provenance, so the same grid swept by any engine
+    # yields the same spec_hash AND the same artifact fingerprint (all
+    # engines are bit-identical by contract; CI asserts it)
     spec = {"name": tag, "grid": {k: list(v) for k, v in axes.items()},
-            "scale": scale, "engine": engine, "native": native}
+            "scale": scale}
     journal_path = (ARTIFACTS / "sweep"
                     / f"{spec_hash(spec)[7:19]}.journal.jsonl")
     print(f"[sweep] {grid_size(axes)} points × 4-row ladder @ "
-          f"scale={scale}, engine={engine}")
+          f"scale={scale}, engine={engine}, backend={backend}")
     t0 = time.time()
     payload = run_ladder_sweep(points, scale=scale, engine=engine,
                                processes=processes, native=native,
                                retries=retries, cell_timeout=cell_timeout,
-                               journal_path=journal_path, resume=resume)
+                               journal_path=journal_path, resume=resume,
+                               backend=backend)
     dt = time.time() - t0
     # failures and wall time are measurements of the run, not the
     # result — they live in provenance so resumed artifacts fingerprint
@@ -229,7 +243,11 @@ def run_sweep(scale: float, axes: Dict[str, list], tag: str,
              "pareto": r["pareto"],
              **{m: r["rows"]["tensor_aware"][m] for m in AGG_COLUMNS}}
             for r in payload["points"] if "degraded_rows" not in r]
+    from repro.core.native import resolve_engine
     provenance = {"tool": tool, "engine": engine,
+                  "engine_resolved": ("jax" if backend == "batched"
+                                      else resolve_engine(engine)),
+                  "backend": backend,
                   "wall_s": round(dt, 2),
                   "created_unix": int(time.time())}
     if failures:
@@ -267,7 +285,8 @@ def cmd_sweep(args: argparse.Namespace) -> int:
     art = run_sweep(scale, axes, tag, engine=args.engine,
                     native=not args.no_native, processes=args.processes,
                     out=args.out, retries=args.retries,
-                    cell_timeout=args.cell_timeout, resume=args.resume)
+                    cell_timeout=args.cell_timeout, resume=args.resume,
+                    backend=args.backend)
     if args.smoke:
         # acceptance gate: every grid point evaluated, every ladder row
         # carries finite positive metrics (a NaN/garbage regression in
@@ -381,7 +400,7 @@ def cmd_bench(args: argparse.Namespace) -> int:
     # through the real sweep parser, so the gate can never drift from
     # what `repro sweep --smoke` itself accepts
     sweep_argv = ["sweep", "--smoke", "--scale", str(scale),
-                  "--engine", args.engine]
+                  "--engine", args.engine, "--backend", args.backend]
     if args.no_native:
         sweep_argv.append("--no-native")
     if args.processes is not None:
@@ -460,9 +479,15 @@ def main(argv: Optional[List[str]] = None) -> int:
     b.add_argument("--scale", type=float, default=None,
                    help="workload scale (default 0.05; "
                         f"{SMOKE_SCALE} under --smoke)")
-    b.add_argument("--engine", default="soa", choices=["soa", "object"],
+    b.add_argument("--engine", default="soa",
+                   choices=["reference", "object", "soa", "native",
+                            "jax"],
                    help="engine for the --smoke table/sweep gates (the "
                         "throughput bench always measures both)")
+    b.add_argument("--backend", default="pool",
+                   choices=["pool", "batched"],
+                   help="execution backend for the --smoke sweep gate "
+                        "and the jax rows of the throughput bench")
     b.add_argument("--processes", type=int, default=None,
                    help="worker processes for the --smoke gates")
     b.add_argument("--no-native", action="store_true",

@@ -100,41 +100,34 @@ def get_lib() -> Optional[ctypes.CDLL]:
     return _lib
 
 
-def run_native(sim, trace: Dict) -> bool:
-    """Run the trace through the compiled kernel, depositing all counters
-    on ``sim`` (a SoAHierarchySim).  Returns False when the kernel is
-    unavailable or the configuration falls outside its envelope."""
-    if not getattr(sim, "native", True):
-        return False
-    lib = get_lib()
-    if lib is None:
-        return False
-    sp = sim.sp
+def pack_config_sp(sp, nten: int):
+    """Lower a ``SystemParams`` + tensor-id count to the kernel's flat
+    ``(ci, cd)`` config arrays, or ``None`` when the configuration is
+    outside the array-kernel envelope.  Single source of truth for the
+    knob lowering shared by the compiled C kernel and the jax engine."""
     from repro.core.params import LINE_SIZE, PAGE_SIZE
     from repro.core.simulator import (ACCEL_MLP, C2C_LATENCY, CORE_MLP,
                                       DRAM_CHANNEL, HBM_CHANNEL,
                                       INV_LATENCY, PREFETCH_THROTTLE)
+    n_req = sp.n_cores + (1 if sp.accel_port else 0)
     pp = sp.prefetch
-    if (LINE_SIZE != 64 or PAGE_SIZE != 4096 or sim.n_req > 8
+    if (LINE_SIZE != 64 or PAGE_SIZE != 4096 or n_req > 8
             or pp.degree > 16 or max(3, pp.ml_history) > 8
             or DRAM_CHANNEL.row_buffer_bytes != HBM_CHANNEL.row_buffer_bytes
             or sp.l1.line_size != 64 or sp.l2.line_size != 64
             or (sp.l3 is not None and sp.l3.line_size != 64)):
-        return False
+        return None
     # one TA-knob set in the kernel: levels running the tensor-aware
     # policy must agree on it, else fall back to the Python SoA path
     from repro.core.params import TensorPolicyParams
     levels = [sp.l1, sp.l2] + ([sp.l3] if sp.l3 is not None else [])
     ta_sets = {lv.ta for lv in levels if lv.policy == "tensor_aware"}
     if len(ta_sets) > 1:
-        return False
+        return None
     tp = ta_sets.pop() if ta_sets else TensorPolicyParams()
 
-    tensor = np.ascontiguousarray(trace["tensor"], np.int32)
-    nten = int(tensor.max()) + 1 if len(tensor) else 1
-
     ci = np.zeros(CI_COUNT, np.int64)
-    ci[CI_NREQ] = sim.n_req
+    ci[CI_NREQ] = n_req
     ci[CI_NCORES] = sp.n_cores
     ci[CI_S1], ci[CI_A1] = sp.l1.n_sets, sp.l1.assoc
     ci[CI_S2], ci[CI_A2] = sp.l2.n_sets, sp.l2.assoc
@@ -183,6 +176,42 @@ def run_native(sim, trace: Dict) -> bool:
     cd[CD_TA_STREAM] = tp.stream_rank
     cd[CD_TA_BYPASS] = (sp.l3.ta.bypass_utility
                         if sp.l3 is not None else 0.0)
+    return ci, cd
+
+
+def resolve_engine(requested: str = "soa") -> str:
+    """The effective engine label for provenance: what will actually run
+    a cell, honoring ``REPRO_SIM_NATIVE`` and the ``--engine`` flag.
+
+    ``soa`` resolves to ``native`` when the compiled kernel is available
+    (``SoAHierarchySim.run`` tries it first) and, symmetrically,
+    ``native`` degrades to ``soa`` when it isn't (the chunked Python
+    path runs instead, bit-identical); ``reference`` is the registry
+    alias for ``object``; ``object``/``jax`` run what they say.
+    """
+    if requested in ("soa", "native"):
+        return "native" if get_lib() is not None else "soa"
+    if requested == "reference":
+        return "object"
+    return requested
+
+
+def run_native(sim, trace: Dict) -> bool:
+    """Run the trace through the compiled kernel, depositing all counters
+    on ``sim`` (a SoAHierarchySim).  Returns False when the kernel is
+    unavailable or the configuration falls outside its envelope."""
+    if not getattr(sim, "native", True):
+        return False
+    lib = get_lib()
+    if lib is None:
+        return False
+    sp = sim.sp
+    tensor = np.ascontiguousarray(trace["tensor"], np.int32)
+    nten = int(tensor.max()) + 1 if len(tensor) else 1
+    packed = pack_config_sp(sp, nten)
+    if packed is None:
+        return False
+    ci, cd = packed
 
     core = np.ascontiguousarray(trace["core"], np.int32)
     pc = np.ascontiguousarray(trace["pc"], np.int64)
@@ -196,8 +225,14 @@ def run_native(sim, trace: Dict) -> bool:
     lib.run_trace(ci, cd, core, pc, addr, write, tensor,
                   np.ascontiguousarray(reuse), ctypes.c_int64(len(core)),
                   oi, od)
+    deposit_counters(sim, oi, od)
+    return True
 
-    # deposit counters on the sim (same surface the Python path fills)
+
+def deposit_counters(sim, oi: np.ndarray, od: np.ndarray) -> None:
+    """Deposit a kernel's flat counter vectors (``oi``[98]/``od``[10],
+    the layout exported by ``_sim_kernel.c`` and ``engine_jax``) on a
+    SoAHierarchySim — the same surface the Python path fills."""
     nr = sim.n_req
     sim.n_acc = int(oi[0])
     sim.wb_lines = int(oi[1])
@@ -246,4 +281,3 @@ def run_native(sim, trace: Dict) -> bool:
     sim.lat_sum = float(od[8])
     mem.migration_stall_cycles = float(od[9])
     sim._native_counts = (l1h, l1m, l1pu, l2h, l2m, l2pu)
-    return True

@@ -133,3 +133,55 @@ class SystemParams:
 
     def cycles_to_ns(self, cycles: float) -> float:
         return cycles / self.clock_ghz
+
+
+# ---------------------------------------------------------------------------
+# jax-engine lane lowering: presets + dotted overrides → padded parameter
+# arrays.  The batched engine (`core/engine_jax.py`) vmaps one compiled
+# program over a stacked axis of configs; everything listed here may
+# differ per lane without recompiling, everything else is structural and
+# keys the compile cache (`engine_jax.StaticConfig`).  numpy-only on
+# purpose — importable without jax (CLI validation, tests, docs).
+# ---------------------------------------------------------------------------
+
+#: per-lane integer scalars (stride-prefetch confidence, hot-page
+#: promotion knobs, tensor-table decay)
+LANE_INT_FIELDS = ("st_conf", "hp_hot", "hp_window", "ta_decay")
+#: per-lane float scalars (ML-prefetch threshold, migration cost,
+#: tensor-aware utility cutoffs/ranks, per-level hit latencies)
+LANE_FLOAT_FIELDS = ("ml_thresh", "migcost", "ta_low", "ta_high",
+                     "ta_pref", "ta_stream", "ta_bypass",
+                     "hl1", "hl2", "hl3")
+
+
+def lane_pad(n: int) -> int:
+    """Pad a lane count up to the next power of two so nearby batch
+    sizes reuse one compiled program (B is baked into the vmapped
+    executable's shapes; without padding every distinct group size
+    triggers a fresh multi-minute XLA:CPU compile)."""
+    if n <= 1:
+        return n
+    return 1 << (n - 1).bit_length()
+
+
+def stack_lanes(cfgs, pad: bool = True):
+    """Stack per-lane config dicts into parameter arrays.
+
+    Returns ``(arrays, n)`` where ``arrays`` maps each LANE_*_FIELDS
+    name to a numpy array of length ``lane_pad(len(cfgs))`` (lanes past
+    ``n`` replicate lane 0 — valid work whose outputs the caller
+    discards) and ``n`` is the real lane count.
+    """
+    import numpy as np
+    n = len(cfgs)
+    if n == 0:
+        raise ValueError("stack_lanes needs at least one lane")
+    total = lane_pad(n) if pad else n
+    idx = list(range(n)) + [0] * (total - n)
+    arrays = {}
+    for k in LANE_INT_FIELDS:
+        arrays[k] = np.asarray([cfgs[i][k] for i in idx], dtype=np.int64)
+    for k in LANE_FLOAT_FIELDS:
+        arrays[k] = np.asarray([cfgs[i][k] for i in idx],
+                               dtype=np.float64)
+    return arrays, n

@@ -19,7 +19,7 @@ line-bytes delivered to requestors per unit time.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional
+from typing import Callable, Dict, List, Optional, Protocol, runtime_checkable
 
 from repro.core.cache import Cache, MODIFIED, SHARED
 from repro.core.coherence import MESIDirectory
@@ -71,22 +71,81 @@ class Metrics:
         return dataclasses.asdict(self)
 
 
+@runtime_checkable
+class EngineBackend(Protocol):
+    """What every simulation engine must expose.
+
+    An engine is constructed from a :class:`SystemParams` and consumes a
+    trace dict, returning :class:`Metrics`.  All engines are bit-identical
+    by contract: same counters, same Metrics floats, IEEE ops in the same
+    order.  ``tests/test_simulator_equiv.py`` enforces this.
+    """
+
+    sp: SystemParams
+
+    def run(self, trace: Dict) -> "Metrics":
+        ...
+
+
+#: engine name -> factory.  ``None`` marks the reference engine itself
+#: (``HierarchySim.__new__`` then falls through to normal construction).
+_ENGINE_REGISTRY: Dict[str, Optional[Callable[[SystemParams], "EngineBackend"]]] = {}
+
+
+def register_engine(name: str,
+                    factory: Optional[Callable[[SystemParams],
+                                               "EngineBackend"]]) -> None:
+    """Register a simulation backend under ``name``.
+
+    ``HierarchySim(sp, engine=name)`` will call ``factory(sp)``.  Factories
+    should import their engine module lazily so optional backends (ctypes
+    kernel, jax) don't tax startup or hard-require their dependency.
+    """
+    _ENGINE_REGISTRY[name] = factory
+
+
+def available_engines() -> List[str]:
+    return sorted(_ENGINE_REGISTRY)
+
+
+def _soa_factory(sp: SystemParams):
+    from repro.core.engine_soa import SoAHierarchySim
+    return SoAHierarchySim(sp)
+
+
+def _native_factory(sp: SystemParams):
+    # The SoA engine with the compiled C kernel preferred.  Falls back to
+    # the chunked Python path (still bit-identical) when no compiler or
+    # REPRO_SIM_NATIVE=0 — the counters never depend on which path ran.
+    from repro.core.engine_soa import SoAHierarchySim
+    sim = SoAHierarchySim(sp)
+    sim.native = True
+    return sim
+
+
+def _jax_factory(sp: SystemParams):
+    from repro.core.engine_jax import JaxHierarchySim
+    return JaxHierarchySim(sp)
+
+
 class HierarchySim:
-    """Reference (object-based) engine, and factory for the SoA engine.
+    """Reference (object-based) engine, and the engine-backend front door.
 
     ``HierarchySim(sp)`` builds the authoritative object engine — the
     oracle every optimization is validated against.  ``HierarchySim(sp,
-    engine="soa")`` returns the structure-of-arrays engine
-    (``engine_soa.SoAHierarchySim``), which is bit-identical in counters
-    and Metrics but ~10× faster on trace-driven runs.
+    engine=...)`` dispatches through the backend registry: ``"soa"`` (and
+    ``"native"``) return the structure-of-arrays engine, ``"jax"`` the
+    batched device-program engine.  All registered backends are
+    bit-identical in counters and Metrics.
     """
 
     def __new__(cls, sp: SystemParams, engine: str = "object"):
-        if cls is HierarchySim and engine == "soa":
-            from repro.core.engine_soa import SoAHierarchySim
-            return SoAHierarchySim(sp)
-        if engine not in ("object", "soa"):
-            raise ValueError(f"unknown engine {engine!r}")
+        try:
+            factory = _ENGINE_REGISTRY[engine]
+        except KeyError:
+            raise ValueError(f"unknown engine {engine!r}") from None
+        if cls is HierarchySim and factory is not None:
+            return factory(sp)
         return super().__new__(cls)
 
     def __init__(self, sp: SystemParams, engine: str = "object"):
@@ -425,3 +484,12 @@ def compute_metrics(sim, trace: Dict) -> Metrics:
 def simulate(sp: SystemParams, trace: Dict,
              engine: str = "object") -> Metrics:
     return HierarchySim(sp, engine=engine).run(trace)
+
+
+# built-in backends.  "object"/"reference" alias the class itself; the
+# rest construct their engine lazily on first use.
+register_engine("object", None)
+register_engine("reference", None)
+register_engine("soa", _soa_factory)
+register_engine("native", _native_factory)
+register_engine("jax", _jax_factory)

@@ -25,6 +25,7 @@ reuse) plus ``meta`` (n_macro_ops, tensor table).
 
 from __future__ import annotations
 
+import os
 from typing import Dict, List
 
 import numpy as np
@@ -117,9 +118,23 @@ def _finish(b: _Builder) -> Dict:
                              for s in b.streams])[order]
     reuse = np.concatenate([np.full(len(s["addrs"]), s["reuse"], np.int8)
                             for s in b.streams])[order]
-    return {"name": b.name, "core": core, "pc": pc, "addr": addr,
-            "write": write, "tensor": tensor, "reuse": reuse,
-            "meta": {"n_macro_ops": b.n_macro, "tensors": b.alloc.table}}
+    out = {"name": b.name, "core": core, "pc": pc, "addr": addr,
+           "write": write, "tensor": tensor, "reuse": reuse,
+           "meta": {"n_macro_ops": b.n_macro, "tensors": b.alloc.table}}
+    # REPRO_TRACE_CAP=N truncates every generated trace to its first N
+    # accesses.  Stream interleaving floors trace length around ~120k
+    # accesses regardless of ``scale``; the cap is how compile-dominated
+    # CI gates (the jax engine pays minutes of XLA:CPU compile per
+    # hierarchy shape) run the REAL sweep/CLI path on a bounded input.
+    # Both sides of an equivalence gate see identical capped traces, so
+    # bit-identity / fingerprint comparisons are unaffected.
+    cap = os.environ.get("REPRO_TRACE_CAP")
+    if cap:
+        n = int(cap)
+        if n > 0 and n < len(out["core"]):
+            for k in ("core", "pc", "addr", "write", "tensor", "reuse"):
+                out[k] = out[k][:n]
+    return out
 
 
 # --------------------------------------------------------------------------

@@ -17,6 +17,7 @@ from repro.kernels import flash_attention as _fa
 from repro.kernels import mamba_scan as _ms
 from repro.kernels import matmul_prefetch as _mm
 from repro.kernels import paged_attention as _pa
+from repro.kernels import tag_probe as _tp
 
 
 def _interpret() -> bool:
@@ -68,3 +69,11 @@ def mamba_scan(a: jax.Array, bx: jax.Array, c: jax.Array,
                bd: int = 256, chunk: int = 128) -> jax.Array:
     return _ms.mamba_scan(a, bx, c, bd=bd, chunk=chunk,
                           interpret=_interpret())
+
+
+@jax.jit
+def tag_probe(tags: jax.Array, valid: jax.Array, last: jax.Array,
+              seq: jax.Array, query: jax.Array) -> jax.Array:
+    """Batched set probe: (B, A) ways -> (B, 3) [hit, way, evict]."""
+    return _tp.tag_probe(tags, valid, last, seq, query,
+                         interpret=_interpret())

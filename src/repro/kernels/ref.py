@@ -68,3 +68,40 @@ def mamba_scan_ref(a, bx, c):
           c.swapaxes(0, 1).astype(jnp.float32))
     _, ys = jax.lax.scan(step, h0, xs)
     return ys.swapaxes(0, 1).astype(a.dtype)          # (B, L, Dn)
+
+
+def tag_probe_ref(tags, valid, last, seq, query):
+    """Sequential way-walk oracle for the set probe (first-index ties).
+
+    tags/valid/last/seq (B, A), query (B,) → (B, 3) int32
+    [hit, way, evict], matching kernels/tag_probe.py.  Deliberately a
+    different formulation: a fori_loop over ways carrying running
+    first-match / first-free / stalest-line state, the way the C kernel
+    and the dict engines walk a set.
+    """
+    B, A = tags.shape
+    vld = valid != 0
+    big = jnp.iinfo(jnp.int32).max
+
+    def walk(w, st):
+        hitw, freew, vic_l, vic_q, vicw = st
+        is_hit = vld[:, w] & (tags[:, w] == query)
+        hitw = jnp.where(is_hit & (hitw < 0), w, hitw)
+        freew = jnp.where(~vld[:, w] & (freew < 0), w, freew)
+        better = (last[:, w] < vic_l) | ((last[:, w] == vic_l)
+                                         & (seq[:, w] < vic_q))
+        vic_l = jnp.where(better, last[:, w], vic_l)
+        vic_q = jnp.where(better, seq[:, w], vic_q)
+        vicw = jnp.where(better, w, vicw)
+        return hitw, freew, vic_l, vic_q, vicw
+
+    init = (jnp.full(B, -1), jnp.full(B, -1), jnp.full(B, jnp.inf),
+            jnp.full(B, big), jnp.zeros(B, jnp.int32))
+    hitw, freew, _, _, vicw = jax.lax.fori_loop(0, A, walk, init)
+
+    hit = hitw >= 0
+    full = freew < 0
+    way = jnp.where(hit, hitw, jnp.where(full, vicw, freew))
+    evict = ~hit & full
+    return jnp.stack([hit.astype(jnp.int32), way.astype(jnp.int32),
+                      evict.astype(jnp.int32)], axis=1)

@@ -14,13 +14,18 @@ Two sweep shapes:
   (``calibration.trend_ok``) — the tool that retunes the paper table.
 
 Execution is delegated to the ``repro.api`` Runner — the one
-process-parallel path (config dedup by value, spawn pool with per-chunk
+execute path (config dedup by value, spawn pool with per-chunk
 trace reuse, native-kernel detection, failure isolation) shared with
-``benchmarks.tables`` and the ``python -m repro`` CLI.
+``benchmarks.tables`` and the ``python -m repro`` CLI.  With
+``backend="batched"`` the Runner routes whole config batches through
+one vmapped jax device program (``core/engine_jax.py``) instead of the
+process pool — same cells, same journal identity, bit-identical rows.
 """
 
 from __future__ import annotations
 
+import copy
+import os
 import sys
 from pathlib import Path
 from typing import Any, Dict, List, Mapping, Optional, Sequence, Tuple
@@ -34,6 +39,33 @@ from repro.sweep.grid import apply_point, point_label
 from repro.sweep.pareto import OBJECTIVES, pareto_front
 
 
+#: cross-call shared-row memo: a config's aggregate depends only on
+#: (config value, workloads, scale, engine) — ladders sharing a row
+#: (every ladder shares baseline/shared_l3, retuned ladders share the
+#: prefetch row) reuse it across *successive* sweep calls in one
+#: process, not just within one Runner chunk.  Only fully-completed
+#: rows are keyed: a ``degraded`` result (failed cells after the retry
+#: budget) must be re-attempted by the next sweep, never replayed.
+#: Chaos campaigns (``REPRO_CHAOS``) bypass the memo entirely — fault
+#: injection is per-(cell, attempt) and reuse would dodge it.
+_SWEEP_MEMO: Dict[Tuple, Dict[str, Any]] = {}
+
+
+def _memo_key(sp: SystemParams, workloads, scale: float,
+              engine: str, native: bool, backend: str) -> Tuple:
+    # engine AND backend key the memo even though results are
+    # bit-identical by contract: the CI equivalence gates re-run the
+    # same configs across engines/backends precisely to PROVE that
+    # contract, and a memo hit would make them vacuous
+    wls = tuple(workloads) if workloads is not None else None
+    return (sp, wls, float(scale), engine, bool(native), backend)
+
+
+def clear_sweep_memo() -> None:
+    """Drop all memoized rows (tests, or to force re-execution)."""
+    _SWEEP_MEMO.clear()
+
+
 def run_config_sweep(configs: Sequence[SystemParams], scale: float = 1.0,
                      engine: str = "soa",
                      processes: Optional[int] = None,
@@ -43,7 +75,8 @@ def run_config_sweep(configs: Sequence[SystemParams], scale: float = 1.0,
                      retries: Optional[int] = None,
                      cell_timeout: Optional[float] = None,
                      journal_path: Optional[Path] = None,
-                     resume: bool = False) -> List[Dict[str, Any]]:
+                     resume: bool = False,
+                     backend: str = "pool") -> List[Dict[str, Any]]:
     """Run every config over the workload suite; one aggregate per config.
 
     Returns, in input order::
@@ -58,11 +91,35 @@ def run_config_sweep(configs: Sequence[SystemParams], scale: float = 1.0,
     # lazy: this module loads with the sweep package __init__; the
     # Runner (and its multiprocessing machinery) only at execution time
     from repro.api.runner import Runner
-    return Runner(processes=processes).run_configs(
-        configs, workloads=workloads, scale=scale, engine=engine,
-        native=native, strict=strict, retries=retries,
-        cell_timeout=cell_timeout, journal_path=journal_path,
-        resume=resume)
+
+    use_memo = not os.environ.get("REPRO_CHAOS")
+    keys = [_memo_key(sp, workloads, scale, engine, native, backend)
+            for sp in configs]
+    todo: List[SystemParams] = []
+    todo_keys = set()
+    for sp, key in zip(configs, keys):
+        if not (use_memo and key in _SWEEP_MEMO) and key not in todo_keys:
+            todo_keys.add(key)
+            todo.append(sp)
+
+    fresh: Dict[Tuple, Dict[str, Any]] = {}
+    if todo:
+        rows = Runner(processes=processes).run_configs(
+            todo, workloads=workloads, scale=scale, engine=engine,
+            native=native, strict=strict, retries=retries,
+            cell_timeout=cell_timeout, journal_path=journal_path,
+            resume=resume, backend=backend)
+        for sp, res in zip(todo, rows):
+            key = _memo_key(sp, workloads, scale, engine, native,
+                            backend)
+            fresh[key] = res
+            # degraded rows (failed cells) are excluded from the memo:
+            # the next sweep must re-attempt them, not replay the hole
+            if use_memo and not res.get("errors"):
+                _SWEEP_MEMO[key] = copy.deepcopy(res)
+
+    return [copy.deepcopy(fresh[key]) if key in fresh
+            else copy.deepcopy(_SWEEP_MEMO[key]) for key in keys]
 
 
 def _split_overrides(point: Mapping[str, Any]) -> Tuple[Dict, Dict]:
@@ -83,7 +140,8 @@ def run_ladder_sweep(points: Sequence[Mapping[str, Any]],
                      retries: Optional[int] = None,
                      cell_timeout: Optional[float] = None,
                      journal_path: Optional[Path] = None,
-                     resume: bool = False) -> Dict[str, Any]:
+                     resume: bool = False,
+                     backend: str = "pool") -> Dict[str, Any]:
     """Evaluate the paper's four-row ladder for every grid point.
 
     Returns an artifact-shaped dict: per point the four row aggregates,
@@ -117,7 +175,8 @@ def run_ladder_sweep(points: Sequence[Mapping[str, Any]],
                                processes=processes, native=native,
                                strict=False, retries=retries,
                                cell_timeout=cell_timeout,
-                               journal_path=journal_path, resume=resume)
+                               journal_path=journal_path, resume=resume,
+                               backend=backend)
 
     # structured failure rows, deduped (aliased configs share them)
     failures: List[Dict[str, Any]] = []
@@ -176,9 +235,13 @@ def run_ladder_sweep(points: Sequence[Mapping[str, Any]],
                    key=lambda i: (ta_rows[i]["hit_rate"],
                                   -ta_rows[i]["latency_ns"]))
         recommended = rows_out[best]
+    # NB: engine/backend are deliberately NOT part of the payload — all
+    # engines are bit-identical by contract, so the sweep *result* is
+    # engine-independent (CI asserts soa and jax artifact fingerprints
+    # match); which engine actually ran is recorded in artifact
+    # provenance by the CLI layer.
     return {
         "scale": scale,
-        "engine": engine,
         "n_points": len(rows_out),
         "n_unique_configs": len(cfgs),
         "objectives": [list(o) for o in objectives],

@@ -13,6 +13,12 @@ from repro.core.presets import CONFIGS
 from repro.core.simulator import HierarchySim
 
 SCALE = 0.012
+#: the jax leg runs a prefix of each trace: compile cost dominates and
+#: the scan's per-step work is identical at any length.  5000 keeps all
+#: three workloads in ONE table-capacity shape bucket (blk 16384 /
+#: page-group 1024), so presets share compiled programs across
+#: workloads instead of recompiling per trace.
+JAX_SLICE = 5000
 
 
 def _counters_ref(sim):
@@ -127,10 +133,100 @@ def test_native_kernel_bit_identical(workload, reference):
     _check(tr, reference, native=True)
 
 
+@pytest.fixture(scope="module")
+def jax_reference(workload):
+    """Counters+metrics on the JAX_SLICE prefix via the SoA engine —
+    itself asserted bit-identical to the object reference above, so the
+    jax leg inherits the full chain jax == soa == object."""
+    _, tr = workload
+    sub = dict(tr)
+    for k in ("core", "pc", "addr", "write", "tensor", "reuse"):
+        sub[k] = tr[k][:JAX_SLICE]
+    out = {}
+    for sp in CONFIGS:
+        sim = HierarchySim(sp, engine="soa")
+        metrics = sim.run(sub)
+        out[sp.name] = (_counters_soa(sim), metrics)
+    return sub, out
+
+
+def test_jax_engine_bit_identical(workload, jax_reference):
+    """Functional jax scan engine — every preset, bit-identical
+    counters and Metrics floats on the shared trace prefix."""
+    pytest.importorskip("jax")
+    sub, want = jax_reference
+    for sp in CONFIGS:
+        sim = HierarchySim(sp, engine="jax")
+        metrics = sim.run(sub)
+        want_ctr, want_metrics = want[sp.name]
+        got_ctr = _counters_soa(sim)
+        assert got_ctr == want_ctr, (sp.name, {
+            k: (want_ctr[k], got_ctr[k])
+            for k in want_ctr if want_ctr[k] != got_ctr[k]})
+        for f in dataclasses.fields(want_metrics):
+            a = getattr(want_metrics, f.name)
+            b = getattr(metrics, f.name)
+            assert a == b, (sp.name, f.name, a, b)
+
+
+def test_jax_engine_bit_identical_off_preset():
+    """Sampled sweep point off the preset manifold (same pattern the C
+    kernel used in test_sweep.py): knob values the preset suite never
+    reaches must agree bit-for-bit too."""
+    pytest.importorskip("jax")
+    from repro.core.presets import TENSOR_AWARE
+    from repro.sweep.grid import apply_point
+    point = {
+        "prefetch.degree": 3,
+        "prefetch.stride_confidence": 4,
+        "l2.policy": "lru",
+        "ta.low_utility": 0.2,
+        "ta.high_utility": 0.8,
+        "ta.prefetch_rank": 1.5,
+        "ta.stream_rank": 1.0,
+        "ta.sample": 8,
+        "ta.bypass_utility": 0.1,
+    }
+    sp = apply_point(TENSOR_AWARE, point, name="sampled")
+    tr = trace_mod.WORKLOADS["transformer"](scale=SCALE)
+    sub = dict(tr)
+    for k in ("core", "pc", "addr", "write", "tensor", "reuse"):
+        sub[k] = tr[k][:JAX_SLICE]
+    ref = HierarchySim(sp, engine="soa")
+    want_metrics = ref.run(sub)
+    got = HierarchySim(sp, engine="jax")
+    metrics = got.run(sub)
+    want_ctr, got_ctr = _counters_soa(ref), _counters_soa(got)
+    assert got_ctr == want_ctr, {
+        k: (want_ctr[k], got_ctr[k])
+        for k in want_ctr if want_ctr[k] != got_ctr[k]}
+    for f in dataclasses.fields(want_metrics):
+        assert getattr(want_metrics, f.name) == getattr(metrics, f.name), \
+            f.name
+
+
 def test_engine_factory_dispatch():
     sp = CONFIGS[0]
     from repro.core.engine_soa import SoAHierarchySim
+    from repro.core.simulator import available_engines
     assert isinstance(HierarchySim(sp, engine="soa"), SoAHierarchySim)
     assert isinstance(HierarchySim(sp), HierarchySim)
+    # registry aliases: "reference" is the object engine, "native" the
+    # SoA engine with the compiled kernel preferred
+    assert isinstance(HierarchySim(sp, engine="reference"), HierarchySim)
+    nat = HierarchySim(sp, engine="native")
+    assert isinstance(nat, SoAHierarchySim) and nat.native
+    assert set(available_engines()) >= {"object", "reference", "soa",
+                                        "native", "jax"}
     with pytest.raises(ValueError):
         HierarchySim(sp, engine="warp")
+
+
+def test_engine_factory_dispatch_jax():
+    pytest.importorskip("jax")
+    sp = CONFIGS[0]
+    from repro.core.engine_jax import JaxHierarchySim
+    from repro.core.engine_soa import SoAHierarchySim
+    sim = HierarchySim(sp, engine="jax")
+    assert isinstance(sim, JaxHierarchySim)
+    assert isinstance(sim, SoAHierarchySim)  # drop-in: same surface

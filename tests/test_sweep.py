@@ -13,7 +13,7 @@ import pytest
 
 from repro.core import trace as trace_mod
 from repro.core.params import TensorPolicyParams
-from repro.core.presets import PREFETCH, TENSOR_AWARE
+from repro.core.presets import BASELINE, PREFETCH, TENSOR_AWARE
 from repro.core.simulator import HierarchySim
 from repro.sweep.grid import (apply_point, enumerate_grid, grid_size,
                               point_label)
@@ -167,6 +167,47 @@ class TestDriver:
         rec = payload["recommended"]
         if rec is not None:
             assert rec["trend_ok"]
+
+    def test_shared_rows_reused_across_calls(self, monkeypatch):
+        """Completed rows are served from the cross-call memo — a second
+        sweep sharing configs re-executes only the new ones — and
+        degraded rows are never memoized."""
+        from repro.api import runner as runner_mod
+        sweep_driver.clear_sweep_memo()
+        executed = []
+        real = runner_mod.Runner.run_configs
+
+        def spy(self, configs, **kw):
+            executed.append([sp.name for sp in configs])
+            return real(self, configs, **kw)
+
+        monkeypatch.setattr(runner_mod.Runner, "run_configs", spy)
+        first = sweep_driver.run_config_sweep(
+            [PREFETCH, TENSOR_AWARE], scale=SCALE, processes=1,
+            workloads=["cnn"])
+        second = sweep_driver.run_config_sweep(
+            [PREFETCH, TENSOR_AWARE, BASELINE], scale=SCALE,
+            processes=1, workloads=["cnn"])
+        assert executed == [["prefetch", "tensor_aware"], ["baseline"]]
+        assert second[0] == first[0] and second[1] == first[1]
+        # mutating a returned row must not poison the memo
+        second[0]["aggregate"]["hit_rate"] = -1.0
+        third = sweep_driver.run_config_sweep(
+            [PREFETCH], scale=SCALE, processes=1, workloads=["cnn"])
+        assert third[0] == first[0]
+        # degraded rows (failed cells) are not memoized
+        degraded = {"name": "prefetch", "aggregate": {},
+                    "errors": {"cnn": {"config_hash": "x"}}}
+        key = sweep_driver._memo_key(PREFETCH, ["rnn"], SCALE, "soa",
+                                     True, "pool")
+        assert key not in sweep_driver._SWEEP_MEMO
+        monkeypatch.setattr(runner_mod.Runner, "run_configs",
+                            lambda self, configs, **kw: [degraded])
+        sweep_driver.run_config_sweep([PREFETCH], scale=SCALE,
+                                      processes=1, workloads=["rnn"],
+                                      strict=False)
+        assert key not in sweep_driver._SWEEP_MEMO
+        sweep_driver.clear_sweep_memo()
 
 
 # ---------------------------------------------------------------------------
