@@ -1,0 +1,81 @@
+"""Invariant-enforcing static analysis for the repro codebase.
+
+The repo's correctness rests on invariants that the test suite can only
+probe dynamically, on sampled points:
+
+* **engine parity** — four registered engines (``reference``/``soa``/
+  ``native``/``jax``) must consume every knob identically; an unplumbed
+  knob silently falls back or, worse, silently diverges (the PR 3
+  C-kernel fallback bug class);
+* **determinism** — journaled resume is bit-identical by contract, so
+  wall-clock, entropy, or set-iteration order anywhere in a result path
+  is a latent artifact-fingerprint bug;
+* **schema consistency** — row dicts and key accesses must agree with
+  ``api.schema``'s canonical key tuples;
+* **jax trace hygiene** — host side effects and tracer coercions inside
+  jitted/scanned bodies, and the XLA:CPU copy-insertion hazard pattern
+  documented in ROADMAP open item 1.
+
+This package checks those invariants *at analysis time*, from the AST,
+before they cost a debugging campaign.  Front door::
+
+    PYTHONPATH=src python -m repro lint [--rule ID] [--json]
+
+Findings carry ``file:line``, a severity, and a rule id; intentional
+exceptions are suppressed inline with a reasoned pragma::
+
+    expr  # repro: lint-ok[DT002] wall_s is volatile provenance
+
+See ``analysis/base.py`` for the rule framework and the ``RULES``
+registry below for the catalog.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence
+
+from repro.analysis.base import (Finding, ProjectContext, Rule,
+                                 apply_suppressions, pragma_findings)
+from repro.analysis.determinism import RULES as _DT_RULES
+from repro.analysis.engine_parity import RULES as _EP_RULES
+from repro.analysis.schema_consistency import RULES as _SC_RULES
+from repro.analysis.trace_hygiene import RULES as _TH_RULES
+
+#: the full rule catalog, id -> rule (stable report order)
+RULES: Dict[str, Rule] = {
+    r.rule_id: r
+    for r in (*_EP_RULES, *_DT_RULES, *_SC_RULES, *_TH_RULES)
+}
+
+
+def run_lint(ctx: ProjectContext,
+             only: Optional[Sequence[str]] = None) -> List[Finding]:
+    """Run the rule catalog (or the ``only`` subset) over a source tree.
+
+    Returns every finding, suppressed ones included (marked); callers
+    gate on the unsuppressed subset.  Pragma hygiene (missing reasons,
+    unused suppressions) is itself reported, but unused-suppression
+    findings are only meaningful on a full catalog run and are skipped
+    when ``only`` narrows the rule set.
+    """
+    selected: List[Rule]
+    if only:
+        unknown = [rid for rid in only if rid not in RULES]
+        if unknown:
+            raise KeyError(f"unknown rule id(s) {unknown}; "
+                           f"known: {sorted(RULES)}")
+        selected = [RULES[rid] for rid in only]
+    else:
+        selected = list(RULES.values())
+
+    findings: List[Finding] = []
+    for rule in selected:
+        findings.extend(rule.check(ctx))
+    findings = apply_suppressions(ctx, findings)
+    findings.extend(pragma_findings(ctx, findings,
+                                    check_unused=not only))
+    findings.sort(key=lambda f: (f.path, f.line, f.rule))
+    return findings
+
+
+__all__ = ["Finding", "ProjectContext", "Rule", "RULES", "run_lint"]

@@ -1,0 +1,277 @@
+"""Rule framework: findings, source-tree context, inline suppression.
+
+A :class:`Rule` inspects a :class:`ProjectContext` (a lazily-parsed
+source tree) and returns :class:`Finding` objects.  Findings are plain
+data — ``file:line``, severity, rule id, message — so the CLI can print
+them, JSON-encode them, and wrap them in an ArtifactV1 envelope without
+any rule knowing about output formats.
+
+Suppression is inline and *reasoned*::
+
+    risky_expr()  # repro: lint-ok[DT002] wall-clock is volatile provenance
+
+The pragma suppresses matching findings on its own line or the line
+directly below it (so a pragma-only comment line can precede a long
+statement, and a pragma on a ``def`` line suppresses a function-scoped
+finding anchored there).  A pragma without a reason, and a pragma that
+suppresses nothing, are themselves findings (``LNT001``/``LNT002``) —
+suppressions must stay auditable and must not outlive the code they
+excuse.
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+import io
+import re
+import tokenize
+from pathlib import Path
+from typing import Dict, Iterable, List, Optional, Protocol, Sequence, Tuple
+
+SEVERITIES = ("error", "warning")
+
+#: matched against whole COMMENT tokens (anchored), so docstrings and
+#: prose that merely *mention* the pragma syntax never register one
+PRAGMA_RE = re.compile(
+    r"^#\s*repro:\s*lint-ok\[([A-Za-z0-9_*,\s-]+)\]\s*(.*?)\s*$")
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One rule violation (or suppressed/pragma-hygiene record)."""
+
+    rule: str
+    severity: str          # "error" | "warning"
+    path: str              # source-root-relative, posix separators
+    line: int              # 1-based
+    message: str
+    suppressed: bool = False
+    reason: str = ""       # the pragma's reason when suppressed
+
+    def location(self) -> str:
+        return f"{self.path}:{self.line}"
+
+    def as_row(self) -> Dict[str, object]:
+        """JSON/artifact row shape (one flat dict per finding)."""
+        return {"rule": self.rule, "severity": self.severity,
+                "path": self.path, "line": self.line,
+                "message": self.message, "suppressed": self.suppressed,
+                "reason": self.reason}
+
+
+@dataclasses.dataclass(frozen=True)
+class Pragma:
+    """One parsed ``lint-ok`` pragma."""
+
+    line: int
+    rule_ids: Tuple[str, ...]      # ("*",) matches every rule
+    reason: str
+    inline: bool = True            # trailing a statement vs comment-only
+
+    def matches(self, rule_id: str) -> bool:
+        return "*" in self.rule_ids or rule_id in self.rule_ids
+
+    def covers(self, line: int) -> bool:
+        """Inline pragmas cover exactly their statement's line;
+        comment-only pragma lines cover the line directly below."""
+        return line == self.line if self.inline else line == self.line + 1
+
+
+class SourceFile:
+    """One source file: text, lines, lazily-parsed AST, pragmas."""
+
+    def __init__(self, root: Path, rel: str) -> None:
+        self.root = root
+        self.rel = rel
+        self.path = root / rel
+        self.text = self.path.read_text(encoding="utf-8",
+                                        errors="replace")
+        self.lines = self.text.splitlines()
+        self._tree: Optional[ast.Module] = None
+        self._pragmas: Optional[List[Pragma]] = None
+
+    @property
+    def tree(self) -> ast.Module:
+        if self._tree is None:
+            self._tree = ast.parse(self.text, filename=str(self.path))
+        return self._tree
+
+    @property
+    def pragmas(self) -> List[Pragma]:
+        if self._pragmas is None:
+            out: List[Pragma] = []
+            try:
+                toks = list(tokenize.generate_tokens(
+                    io.StringIO(self.text).readline))
+            except (tokenize.TokenError, SyntaxError, IndentationError):
+                toks = []
+            for tok in toks:
+                if tok.type != tokenize.COMMENT:
+                    continue
+                m = PRAGMA_RE.match(tok.string)
+                if m:
+                    ids = tuple(s.strip() for s in m.group(1).split(",")
+                                if s.strip())
+                    lineno = tok.start[0]
+                    before = self.lines[lineno - 1][:tok.start[1]] \
+                        if lineno <= len(self.lines) else ""
+                    out.append(Pragma(line=lineno, rule_ids=ids,
+                                      reason=m.group(2).strip(),
+                                      inline=bool(before.strip())))
+            self._pragmas = out
+        return self._pragmas
+
+    def pragma_for(self, line: int, rule_id: str) -> Optional[Pragma]:
+        """The pragma covering ``line`` for ``rule_id``: an inline
+        pragma on that line, or a comment-only pragma directly above."""
+        for p in self.pragmas:
+            if p.covers(line) and p.matches(rule_id):
+                return p
+        return None
+
+
+class ProjectContext:
+    """A lazily-loaded view of one source tree.
+
+    ``src_root`` is the directory that *contains* the ``repro``
+    package (normally ``<repo>/src``); every rule addresses files by
+    their root-relative posix path, so tests can point the same rules
+    at fixture trees.
+    """
+
+    def __init__(self, src_root: Path) -> None:
+        self.src_root = Path(src_root)
+        self._files: Dict[str, Optional[SourceFile]] = {}
+
+    def file(self, rel: str) -> Optional[SourceFile]:
+        """The source file at ``rel``, or None when absent."""
+        if rel not in self._files:
+            path = self.src_root / rel
+            self._files[rel] = (SourceFile(self.src_root, rel)
+                                if path.is_file() else None)
+        return self._files[rel]
+
+    def loaded_files(self) -> List[SourceFile]:
+        """Every file any rule touched this run (sorted)."""
+        return [sf for rel, sf in sorted(self._files.items())
+                if sf is not None]
+
+    def python_files(self,
+                     prefixes: Sequence[str]) -> List[SourceFile]:
+        """Every ``.py`` file under any of the given root-relative
+        directory prefixes (sorted for deterministic report order)."""
+        rels: List[str] = []
+        for prefix in prefixes:
+            base = self.src_root / prefix
+            if base.is_file() and prefix.endswith(".py"):
+                rels.append(prefix)
+                continue
+            if not base.is_dir():
+                continue
+            for p in sorted(base.rglob("*.py")):
+                if "__pycache__" in p.parts:
+                    continue
+                rels.append(p.relative_to(self.src_root).as_posix())
+        out: List[SourceFile] = []
+        for rel in sorted(set(rels)):
+            sf = self.file(rel)
+            if sf is not None:
+                out.append(sf)
+        return out
+
+
+class Rule(Protocol):
+    """What every lint rule exposes."""
+
+    rule_id: str
+    title: str
+    severity: str
+
+    def check(self, ctx: ProjectContext) -> List[Finding]:
+        """Findings for this rule over the whole tree (unsuppressed —
+        suppression is applied centrally by :func:`apply_suppressions`)."""
+        ...
+
+
+def apply_suppressions(ctx: ProjectContext,
+                       findings: Iterable[Finding]) -> List[Finding]:
+    """Mark findings covered by a matching pragma as suppressed."""
+    out: List[Finding] = []
+    for f in findings:
+        sf = ctx.file(f.path)
+        pragma = sf.pragma_for(f.line, f.rule) if sf is not None else None
+        if pragma is not None:
+            f = dataclasses.replace(f, suppressed=True,
+                                    reason=pragma.reason)
+        out.append(f)
+    return out
+
+
+def pragma_findings(ctx: ProjectContext, findings: Sequence[Finding],
+                    check_unused: bool = True) -> List[Finding]:
+    """Pragma hygiene over every file the rules touched: ``LNT001``
+    reason-less pragmas (error), ``LNT002`` pragmas that suppress
+    nothing (warning; only meaningful on full-catalog runs)."""
+    used: Dict[Tuple[str, int], bool] = {}
+    for f in findings:
+        if f.suppressed:
+            sf = ctx.file(f.path)
+            if sf is None:
+                continue
+            p = sf.pragma_for(f.line, f.rule)
+            if p is not None:
+                used[(f.path, p.line)] = True
+
+    out: List[Finding] = []
+    for sf in ctx.loaded_files():
+        for p in sf.pragmas:
+            if not p.reason:
+                out.append(Finding(
+                    rule="LNT001", severity="error", path=sf.rel,
+                    line=p.line,
+                    message=f"lint-ok[{','.join(p.rule_ids)}] pragma "
+                            f"has no reason — suppressions must say why"))
+            elif check_unused and (sf.rel, p.line) not in used:
+                out.append(Finding(
+                    rule="LNT002", severity="warning", path=sf.rel,
+                    line=p.line,
+                    message=f"lint-ok[{','.join(p.rule_ids)}] pragma "
+                            f"suppresses nothing here — stale, remove "
+                            f"it"))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# shared AST helpers used by several rule families
+# ---------------------------------------------------------------------------
+def dotted_name(node: ast.AST) -> Optional[str]:
+    """``a.b.c`` for a Name/Attribute chain, else None."""
+    parts: List[str] = []
+    cur = node
+    while isinstance(cur, ast.Attribute):
+        parts.append(cur.attr)
+        cur = cur.value
+    if isinstance(cur, ast.Name):
+        parts.append(cur.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def str_const(node: ast.AST) -> Optional[str]:
+    if isinstance(node, ast.Constant) and isinstance(node.value, str):
+        return node.value
+    return None
+
+
+def tuple_of_strings(node: ast.AST) -> Optional[Tuple[str, ...]]:
+    """The literal value of a tuple/list of string constants."""
+    if not isinstance(node, (ast.Tuple, ast.List)):
+        return None
+    vals: List[str] = []
+    for el in node.elts:
+        s = str_const(el)
+        if s is None:
+            return None
+        vals.append(s)
+    return tuple(vals)

@@ -1,0 +1,237 @@
+"""Determinism rules: result paths must be replayable bit-for-bit.
+
+Journaled ``--resume`` campaigns, the sweep memo, and the chaos gate
+all assert *artifact fingerprints* — a sha256 over rows/result — are
+identical across runs.  That contract dies quietly the moment a result
+path consults wall-clock time, unseeded entropy, or Python set
+iteration order (hash-randomized across processes).  These rules ban
+the whole class inside the result-path packages (``core/``,
+``runtime/``, ``sweep/``, ``api/``); legitimate uses (volatile
+provenance like ``wall_s``, which the fingerprint explicitly excludes)
+carry a reasoned pragma.
+
+Rules:
+
+* **DT001** — unseeded RNG: ``random.*`` module calls,
+  ``np.random.<legacy>`` global-state draws, ``default_rng()`` /
+  ``random.Random()`` with no seed.
+* **DT002** — wall-clock / entropy: ``time.time``, ``time.time_ns``,
+  ``datetime.now``/``utcnow``, ``os.urandom``, ``uuid.uuid1``/
+  ``uuid4``, ``secrets.*``.
+* **DT003** — set-order iteration: ``for``/comprehension/``list()``/
+  ``tuple()``/``enumerate()``/``iter()``/``join()`` over a set
+  expression or a variable assigned one (wrap in ``sorted()``).
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Set, Tuple
+
+from repro.analysis.base import Finding, ProjectContext, dotted_name
+
+#: packages whose files feed rows, journals, or artifact fingerprints
+SCOPE = ("repro/core", "repro/runtime", "repro/sweep", "repro/api")
+
+_RANDOM_MODULE_FNS = {
+    "random", "randint", "randrange", "choice", "choices", "shuffle",
+    "sample", "uniform", "gauss", "normalvariate", "lognormvariate",
+    "expovariate", "vonmisesvariate", "paretovariate", "betavariate",
+    "gammavariate", "weibullvariate", "triangular", "getrandbits",
+    "randbytes", "seed",
+}
+_NP_LEGACY_FNS = {
+    "rand", "randn", "randint", "random", "random_sample", "ranf",
+    "choice", "shuffle", "permutation", "uniform", "normal", "seed",
+    "standard_normal", "bytes",
+}
+_CLOCK_ENTROPY = {
+    "time.time", "time.time_ns", "datetime.now", "datetime.utcnow",
+    "datetime.datetime.now", "datetime.datetime.utcnow", "os.urandom",
+    "uuid.uuid1", "uuid.uuid4",
+}
+# NB: max()/min()/sum() over a set are order-independent and stay legal
+_SET_CONSUMERS = {"list", "tuple", "enumerate", "iter"}
+
+
+def _is_seeded_ctor(call: ast.Call) -> bool:
+    """default_rng/Generator/RandomState/Random with an explicit seed."""
+    return bool(call.args) or bool(call.keywords)
+
+
+class UnseededRandom:
+    rule_id = "DT001"
+    title = "unseeded RNG in a result path"
+    severity = "error"
+
+    def check(self, ctx: ProjectContext) -> List[Finding]:
+        out: List[Finding] = []
+        for sf in ctx.python_files(SCOPE):
+            for node in ast.walk(sf.tree):
+                if not isinstance(node, ast.Call):
+                    continue
+                name = dotted_name(node.func)
+                if name is None:
+                    continue
+                parts = name.split(".")
+                msg: Optional[str] = None
+                if parts[-1] in ("default_rng", "Random", "Generator",
+                                 "RandomState", "SeedSequence"):
+                    if not _is_seeded_ctor(node):
+                        msg = (f"{name}() without an explicit seed — "
+                               f"results will differ run to run")
+                elif (len(parts) == 2 and parts[0] == "random"
+                        and parts[1] in _RANDOM_MODULE_FNS):
+                    msg = (f"{name}() draws from the global unseeded "
+                           f"RNG — use a seeded random.Random(seed) or "
+                           f"the chaos-style pure hash")
+                elif (len(parts) >= 2 and parts[-2] == "random"
+                        and parts[-1] in _NP_LEGACY_FNS):
+                    msg = (f"{name}() uses numpy's global RNG state — "
+                           f"use np.random.default_rng(seed)")
+                if msg:
+                    out.append(Finding(
+                        rule=self.rule_id, severity=self.severity,
+                        path=sf.rel, line=node.lineno, message=msg))
+        return out
+
+
+class WallClockEntropy:
+    rule_id = "DT002"
+    title = "wall-clock/entropy in a result path"
+    severity = "error"
+
+    def check(self, ctx: ProjectContext) -> List[Finding]:
+        out: List[Finding] = []
+        for sf in ctx.python_files(SCOPE):
+            for node in ast.walk(sf.tree):
+                if not isinstance(node, ast.Call):
+                    continue
+                name = dotted_name(node.func)
+                if name is None:
+                    continue
+                parts = name.split(".")
+                if name in _CLOCK_ENTROPY or parts[0] == "secrets":
+                    out.append(Finding(
+                        rule=self.rule_id, severity=self.severity,
+                        path=sf.rel, line=node.lineno,
+                        message=f"{name}() in a result path — anything "
+                                f"it feeds diverges between a run and "
+                                f"its journaled resume; keep it out of "
+                                f"rows/result or pragma it as volatile "
+                                f"provenance"))
+        return out
+
+
+class _SetTracker(ast.NodeVisitor):
+    """Per-function tracking of names bound to set expressions, plus
+    the iteration sites that consume them."""
+
+    def __init__(self, rule_id: str, severity: str, rel: str,
+                 findings: List[Finding]) -> None:
+        self.rule_id = rule_id
+        self.severity = severity
+        self.rel = rel
+        self.findings = findings
+        self.set_names: Set[str] = set()
+
+    # -- what counts as a set expression ---------------------------------
+    def _is_set_expr(self, node: ast.AST) -> bool:
+        if isinstance(node, (ast.Set, ast.SetComp)):
+            return True
+        if isinstance(node, ast.Call):
+            name = dotted_name(node.func)
+            if name in ("set", "frozenset"):
+                return True
+            if name is not None and name.split(".")[-1] in (
+                    "intersection", "union", "difference",
+                    "symmetric_difference"):
+                base = node.func
+                return (isinstance(base, ast.Attribute)
+                        and self._is_set_expr(base.value))
+        if isinstance(node, ast.BinOp) and isinstance(
+                node.op, (ast.BitOr, ast.BitAnd, ast.Sub, ast.BitXor)):
+            return (self._is_set_expr(node.left)
+                    or self._is_set_expr(node.right))
+        if isinstance(node, ast.Name):
+            return node.id in self.set_names
+        return False
+
+    def _flag(self, node: ast.AST, how: str) -> None:
+        self.findings.append(Finding(
+            rule=self.rule_id, severity=self.severity, path=self.rel,
+            line=getattr(node, "lineno", 1),
+            message=f"{how} iterates a set — Python set order is "
+                    f"hash-randomized across processes, so anything "
+                    f"this feeds (rows, journal entries, labels) "
+                    f"fingerprints differently per run; wrap in "
+                    f"sorted()"))
+
+    # -- tracking --------------------------------------------------------
+    def visit_Assign(self, node: ast.Assign) -> None:
+        if self._is_set_expr(node.value):
+            for tgt in node.targets:
+                if isinstance(tgt, ast.Name):
+                    self.set_names.add(tgt.id)
+        else:
+            for tgt in node.targets:
+                if isinstance(tgt, ast.Name):
+                    self.set_names.discard(tgt.id)
+        self.generic_visit(node)
+
+    def visit_AnnAssign(self, node: ast.AnnAssign) -> None:
+        if node.value is not None and isinstance(node.target, ast.Name):
+            if self._is_set_expr(node.value):
+                self.set_names.add(node.target.id)
+            else:
+                self.set_names.discard(node.target.id)
+        self.generic_visit(node)
+
+    # -- consumption sites ----------------------------------------------
+    def visit_For(self, node: ast.For) -> None:
+        if self._is_set_expr(node.iter):
+            self._flag(node, "for loop")
+        self.generic_visit(node)
+
+    def _visit_comp(self, node: ast.AST) -> None:
+        for gen in getattr(node, "generators", []):
+            if self._is_set_expr(gen.iter):
+                self._flag(node, "comprehension")
+        self.generic_visit(node)
+
+    visit_ListComp = _visit_comp
+    visit_GeneratorExp = _visit_comp
+    visit_DictComp = _visit_comp
+
+    def visit_SetComp(self, node: ast.SetComp) -> None:
+        # building a set from a set keeps unordered semantics — fine
+        self.generic_visit(node)
+
+    def visit_Call(self, node: ast.Call) -> None:
+        name = dotted_name(node.func)
+        if name is not None and node.args:
+            fn = name.split(".")[-1]
+            if (name in _SET_CONSUMERS or fn == "join") \
+                    and self._is_set_expr(node.args[0]):
+                self._flag(node, f"{fn}()")
+        self.generic_visit(node)
+
+
+class SetOrderIteration:
+    rule_id = "DT003"
+    title = "set-iteration order feeding a result path"
+    severity = "error"
+
+    def check(self, ctx: ProjectContext) -> List[Finding]:
+        out: List[Finding] = []
+        for sf in ctx.python_files(SCOPE):
+            # one tracker per top-level scope: module body, then each
+            # function/class gets the accumulated module knowledge —
+            # a shared-visitor walk keeps it simple and conservative
+            tracker = _SetTracker(self.rule_id, self.severity, sf.rel,
+                                  out)
+            tracker.visit(sf.tree)
+        return out
+
+
+RULES = (UnseededRandom(), WallClockEntropy(), SetOrderIteration())

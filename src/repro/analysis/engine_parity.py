@@ -1,0 +1,255 @@
+"""Engine-parity rules: every knob plumbed through all four engines.
+
+The four registered engines (``reference``/``soa``/``native``/``jax``)
+are bit-identical *by contract*, and the contract is only as strong as
+the knob plumbing: ``core/params.py`` declares the knobs,
+``core/native.py pack_config_sp`` lowers them to the flat ``(ci, cd)``
+config arrays the C kernel and the jax engine both consume, the C
+kernel's enums define the array layout, and ``core/engine_jax.py``
+re-reads every slot.  PR 3 shipped a silent C-kernel fallback when a
+knob wasn't plumbed — a whole class of bug these rules catch at
+analysis time, on *every* knob, not just the sampled points the
+bit-identity tests cover.
+
+Rules:
+
+* **EP001** — every per-lane field (``LANE_INT_FIELDS`` /
+  ``LANE_FLOAT_FIELDS``) must be produced by ``engine_jax.split_config``
+  *and* consumed by the jax step machinery (``cfg["<field>"]`` outside
+  ``split_config``); and conversely every ``split_config`` cfg key must
+  be a declared lane field (else the knob silently recompiles per
+  value).
+* **EP002** — every field of the knob dataclasses
+  (``TensorPolicyParams`` / ``PrefetchParams`` / ``HybridMemParams``)
+  must be referenced inside ``pack_config_sp`` — the single lowering
+  shared by the compiled kernel and the jax engine.
+* **EP003** — the ``CI_*``/``CD_*`` index-name sequences in
+  ``native.py`` must match the C kernel's enum blocks name-for-name,
+  in order.
+* **EP004** — every config-array slot (each ``CI_*``/``CD_*`` name)
+  must be consumed somewhere in ``engine_jax.py``.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import List, Set
+
+from repro.analysis import project
+from repro.analysis.base import Finding, ProjectContext
+from repro.analysis.project import (ENGINE_JAX_PY, KNOB_DATACLASSES,
+                                    NATIVE_PY, PARAMS_PY, SIM_KERNEL_C)
+
+
+def _missing_file(rule_id: str, severity: str, rel: str) -> Finding:
+    return Finding(rule=rule_id, severity=severity, path=rel, line=1,
+                   message=f"{rel} not found — cannot check engine "
+                           f"parity (layout drifted?)")
+
+
+class LaneFieldParity:
+    """EP001: LANE_*_FIELDS ↔ engine_jax split_config/consumption."""
+
+    rule_id = "EP001"
+    title = "per-lane knob plumbed through the jax engine"
+    severity = "error"
+
+    def check(self, ctx: ProjectContext) -> List[Finding]:
+        params = ctx.file(PARAMS_PY)
+        jaxf = ctx.file(ENGINE_JAX_PY)
+        if params is None:
+            return [_missing_file(self.rule_id, self.severity, PARAMS_PY)]
+        if jaxf is None:
+            return [_missing_file(self.rule_id, self.severity,
+                                  ENGINE_JAX_PY)]
+        ints, floats = project.lane_fields(params)
+        declared = list(ints) + list(floats)
+        if not declared:
+            return [Finding(
+                rule=self.rule_id, severity=self.severity,
+                path=PARAMS_PY, line=1,
+                message="LANE_INT_FIELDS/LANE_FLOAT_FIELDS literals not "
+                        "found in params.py")]
+
+        split = project.function_def(jaxf, "split_config")
+        produced: Set[str] = set()
+        split_lines: Set[int] = set()
+        if split is not None:
+            split_lines = {n.lineno for n in ast.walk(split)
+                           if hasattr(n, "lineno")}
+            for stmt in ast.walk(split):
+                if isinstance(stmt, ast.Assign) and any(
+                        isinstance(t, ast.Name) and t.id == "cfg"
+                        for t in stmt.targets):
+                    keys = project.dict_literal_keys(stmt.value)
+                    if keys:
+                        produced = {k for k, _ in keys}
+
+        consumed = {k for k, line in
+                    project.subscript_str_reads(jaxf.tree, "cfg")
+                    if line not in split_lines}
+
+        out: List[Finding] = []
+        decl_line = project.assign_line(params, "LANE_INT_FIELDS")
+        for name in declared:
+            line = decl_line if name in ints else \
+                project.assign_line(params, "LANE_FLOAT_FIELDS")
+            if name not in produced:
+                out.append(Finding(
+                    rule=self.rule_id, severity=self.severity,
+                    path=PARAMS_PY, line=line,
+                    message=f"lane field {name!r} is declared in "
+                            f"params.py but split_config "
+                            f"(engine_jax.py) never packs it — the jax "
+                            f"engine runs with a stale/default value"))
+            elif name not in consumed:
+                out.append(Finding(
+                    rule=self.rule_id, severity=self.severity,
+                    path=ENGINE_JAX_PY, line=1,
+                    message=f"lane field {name!r} is packed by "
+                            f"split_config but never read as "
+                            f"cfg[{name!r}] by the step machinery — "
+                            f"dead knob in the jax engine"))
+        for name in sorted(produced):
+            if name not in declared:
+                out.append(Finding(
+                    rule=self.rule_id, severity=self.severity,
+                    path=ENGINE_JAX_PY,
+                    line=split.lineno if split is not None else 1,
+                    message=f"split_config packs {name!r} which is not "
+                            f"in LANE_INT_FIELDS/LANE_FLOAT_FIELDS — "
+                            f"stack_lanes will not batch it, so "
+                            f"varying it recompiles per value"))
+        return out
+
+
+class KnobLowering:
+    """EP002: every knob-dataclass field referenced in pack_config_sp."""
+
+    rule_id = "EP002"
+    title = "params knob lowered by native.pack_config_sp"
+    severity = "error"
+
+    def check(self, ctx: ProjectContext) -> List[Finding]:
+        params = ctx.file(PARAMS_PY)
+        native = ctx.file(NATIVE_PY)
+        if params is None:
+            return [_missing_file(self.rule_id, self.severity, PARAMS_PY)]
+        if native is None:
+            return [_missing_file(self.rule_id, self.severity, NATIVE_PY)]
+        pack = project.function_def(native, "pack_config_sp")
+        if pack is None:
+            return [Finding(
+                rule=self.rule_id, severity=self.severity,
+                path=NATIVE_PY, line=1,
+                message="pack_config_sp not found in native.py — the "
+                        "knob-lowering single source of truth is gone")]
+        referenced = project.attr_names_in(pack)
+        out: List[Finding] = []
+        for cls in KNOB_DATACLASSES:
+            for field, line in project.dataclass_fields(params, cls):
+                if field not in referenced:
+                    out.append(Finding(
+                        rule=self.rule_id, severity=self.severity,
+                        path=PARAMS_PY, line=line,
+                        message=f"{cls}.{field} is never referenced in "
+                                f"native.pack_config_sp — the C kernel "
+                                f"and jax engine will silently ignore "
+                                f"this knob (the PR 3 fallback bug "
+                                f"class)"))
+        return out
+
+
+class ConfigIndexLayout:
+    """EP003: native.py index tuples == C kernel enum blocks."""
+
+    rule_id = "EP003"
+    title = "ci/cd config-array layout matches the C kernel"
+    severity = "error"
+
+    def check(self, ctx: ProjectContext) -> List[Finding]:
+        native = ctx.file(NATIVE_PY)
+        ckern = ctx.file(SIM_KERNEL_C)
+        if native is None:
+            return [_missing_file(self.rule_id, self.severity, NATIVE_PY)]
+        if ckern is None:
+            return [_missing_file(self.rule_id, self.severity,
+                                  SIM_KERNEL_C)]
+        out: List[Finding] = []
+        for prefix in ("CI_", "CD_"):
+            py_names, py_line = project.index_tuple_names(native, prefix)
+            c_names, c_line = project.c_enum_names(ckern, prefix)
+            if not py_names:
+                out.append(Finding(
+                    rule=self.rule_id, severity=self.severity,
+                    path=NATIVE_PY, line=1,
+                    message=f"no {prefix}* index tuple found in "
+                            f"native.py"))
+                continue
+            if not c_names:
+                out.append(Finding(
+                    rule=self.rule_id, severity=self.severity,
+                    path=SIM_KERNEL_C, line=1,
+                    message=f"no {prefix}* enum block found in "
+                            f"_sim_kernel.c"))
+                continue
+            if py_names != c_names:
+                # pinpoint the first divergence
+                i = next((j for j, (a, b) in
+                          enumerate(zip(py_names, c_names)) if a != b),
+                         min(len(py_names), len(c_names)))
+                a = py_names[i] if i < len(py_names) else "<missing>"
+                b = c_names[i] if i < len(c_names) else "<missing>"
+                out.append(Finding(
+                    rule=self.rule_id, severity=self.severity,
+                    path=NATIVE_PY, line=py_line,
+                    message=f"{prefix}* config-array layout diverges "
+                            f"from _sim_kernel.c at slot {i}: python "
+                            f"{a!r} vs C {b!r} (enum at "
+                            f"{SIM_KERNEL_C}:{c_line}) — every knob "
+                            f"after the divergence lands in the wrong "
+                            f"slot"))
+        return out
+
+
+class JaxSlotConsumption:
+    """EP004: every ci/cd slot consumed by engine_jax.py."""
+
+    rule_id = "EP004"
+    title = "every config-array slot consumed by the jax engine"
+    severity = "error"
+
+    def check(self, ctx: ProjectContext) -> List[Finding]:
+        native = ctx.file(NATIVE_PY)
+        jaxf = ctx.file(ENGINE_JAX_PY)
+        if native is None:
+            return [_missing_file(self.rule_id, self.severity, NATIVE_PY)]
+        if jaxf is None:
+            return [_missing_file(self.rule_id, self.severity,
+                                  ENGINE_JAX_PY)]
+        used: Set[str] = set()
+        for n in ast.walk(jaxf.tree):
+            if isinstance(n, ast.Attribute):
+                used.add(n.attr)
+            elif isinstance(n, ast.Name):
+                used.add(n.id)
+        out: List[Finding] = []
+        for prefix in ("CI_", "CD_"):
+            names, line = project.index_tuple_names(native, prefix)
+            for name in names:
+                if name.endswith("_COUNT"):
+                    continue
+                if name not in used:
+                    out.append(Finding(
+                        rule=self.rule_id, severity=self.severity,
+                        path=NATIVE_PY, line=line,
+                        message=f"config slot {name} is packed by "
+                                f"pack_config_sp but engine_jax.py "
+                                f"never reads it — the jax engine "
+                                f"ignores that knob while the C kernel "
+                                f"honors it (parity break)"))
+        return out
+
+
+RULES = (LaneFieldParity(), KnobLowering(), ConfigIndexLayout(),
+         JaxSlotConsumption())

@@ -1,0 +1,184 @@
+"""Project-fact extractors shared by the rule families.
+
+Everything here reads the *AST/text* of the tree under analysis — never
+imports it — so the rules also work on mutated fixture trees (the
+mutation tests inject an unplumbed knob into a copy of ``params.py``
+and assert engine-parity fires) and on trees that would not import.
+
+Canonical file locations (root-relative, the real repo layout; fixture
+trees mirror whichever subset a rule needs):
+"""
+
+from __future__ import annotations
+
+import ast
+import re
+from typing import Dict, List, Optional, Set, Tuple
+
+from repro.analysis.base import (ProjectContext, SourceFile,
+                                 tuple_of_strings)
+
+PARAMS_PY = "repro/core/params.py"
+NATIVE_PY = "repro/core/native.py"
+ENGINE_JAX_PY = "repro/core/engine_jax.py"
+SIM_KERNEL_C = "repro/core/_sim_kernel.c"
+SCHEMA_PY = "repro/api/schema.py"
+SIMULATOR_PY = "repro/core/simulator.py"
+
+#: the params dataclasses whose every field must be plumbed through
+#: ``native.pack_config_sp`` (the single knob-lowering path shared by
+#: the C kernel and the jax engine)
+KNOB_DATACLASSES = ("TensorPolicyParams", "PrefetchParams",
+                    "HybridMemParams")
+
+
+def module_assign(sf: SourceFile, name: str) -> Optional[ast.expr]:
+    """The value expression of a module-level ``name = ...``."""
+    for node in sf.tree.body:
+        if isinstance(node, ast.Assign):
+            for tgt in node.targets:
+                if isinstance(tgt, ast.Name) and tgt.id == name:
+                    return node.value
+        elif isinstance(node, ast.AnnAssign):
+            if (isinstance(node.target, ast.Name)
+                    and node.target.id == name
+                    and node.value is not None):
+                return node.value
+    return None
+
+
+def assign_line(sf: SourceFile, name: str) -> int:
+    for node in sf.tree.body:
+        if isinstance(node, ast.Assign):
+            for tgt in node.targets:
+                if isinstance(tgt, ast.Name) and tgt.id == name:
+                    return node.lineno
+        elif isinstance(node, ast.AnnAssign):
+            if isinstance(node.target, ast.Name) and node.target.id == name:
+                return node.lineno
+    return 1
+
+
+def lane_fields(sf: SourceFile) -> Tuple[Tuple[str, ...], Tuple[str, ...]]:
+    """(LANE_INT_FIELDS, LANE_FLOAT_FIELDS) literals from params.py."""
+    out: List[Tuple[str, ...]] = []
+    for name in ("LANE_INT_FIELDS", "LANE_FLOAT_FIELDS"):
+        val = module_assign(sf, name)
+        fields = tuple_of_strings(val) if val is not None else None
+        out.append(fields or ())
+    return out[0], out[1]
+
+
+def dataclass_fields(sf: SourceFile,
+                     class_name: str) -> List[Tuple[str, int]]:
+    """(field name, line) for every annotated field of a dataclass."""
+    for node in ast.walk(sf.tree):
+        if isinstance(node, ast.ClassDef) and node.name == class_name:
+            fields: List[Tuple[str, int]] = []
+            for stmt in node.body:
+                if (isinstance(stmt, ast.AnnAssign)
+                        and isinstance(stmt.target, ast.Name)):
+                    fields.append((stmt.target.id, stmt.lineno))
+            return fields
+    return []
+
+
+def function_def(sf: SourceFile,
+                 name: str) -> Optional[ast.FunctionDef]:
+    for node in ast.walk(sf.tree):
+        if isinstance(node, ast.FunctionDef) and node.name == name:
+            return node
+    return None
+
+
+def attr_names_in(node: ast.AST) -> Set[str]:
+    """Every attribute name referenced anywhere under ``node``."""
+    return {n.attr for n in ast.walk(node)
+            if isinstance(n, ast.Attribute)}
+
+
+def index_tuple_names(sf: SourceFile,
+                      prefix: str) -> Tuple[Tuple[str, ...], int]:
+    """The ``(CI_A, CI_B, ...) = range(N)`` unpack in native.py whose
+    names start with ``prefix``; returns (names, line)."""
+    for node in sf.tree.body:
+        if not isinstance(node, ast.Assign) or len(node.targets) != 1:
+            continue
+        tgt = node.targets[0]
+        if not isinstance(tgt, (ast.Tuple, ast.List)):
+            continue
+        names = [el.id for el in tgt.elts if isinstance(el, ast.Name)]
+        if (len(names) == len(tgt.elts) and names
+                and all(n.startswith(prefix) for n in names)):
+            return tuple(names), node.lineno
+    return (), 1
+
+
+def c_enum_names(sf: SourceFile,
+                 prefix: str) -> Tuple[Tuple[str, ...], int]:
+    """The ``enum { PREFIX_A, PREFIX_B, ... };`` member list from the C
+    kernel source whose members start with ``prefix``."""
+    for m in re.finditer(r"enum\s*\{([^}]*)\}", sf.text):
+        members = [s.strip() for s in m.group(1).split(",") if s.strip()]
+        if members and all(s.startswith(prefix) for s in members):
+            line = sf.text[:m.start()].count("\n") + 1
+            return tuple(members), line
+    return (), 1
+
+
+def dict_literal_keys(node: ast.AST) -> Optional[List[Tuple[str, int]]]:
+    """(key, line) pairs of a dict literal with all-string keys; None
+    when any key is dynamic (``**spread`` or computed)."""
+    if not isinstance(node, ast.Dict):
+        return None
+    out: List[Tuple[str, int]] = []
+    for k in node.keys:
+        if (isinstance(k, ast.Constant) and isinstance(k.value, str)):
+            out.append((k.value, k.lineno))
+        else:
+            return None
+    return out
+
+
+def subscript_str_reads(node: ast.AST,
+                        base_name: str) -> List[Tuple[str, int]]:
+    """Every ``base_name["key"]`` string-constant subscript under node."""
+    out: List[Tuple[str, int]] = []
+    for n in ast.walk(node):
+        if (isinstance(n, ast.Subscript)
+                and isinstance(n.value, ast.Name)
+                and n.value.id == base_name
+                and isinstance(n.slice, ast.Constant)
+                and isinstance(n.slice.value, str)):
+            out.append((n.slice.value, n.lineno))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# schema key sets (for the schema-consistency family)
+# ---------------------------------------------------------------------------
+def schema_key_sets(ctx: ProjectContext) -> Dict[str, Tuple[str, ...]]:
+    """The canonical key tuples, extracted statically.
+
+    ``FAILURE_ROW_KEYS`` / ``AGG_COLUMNS`` / ``KINDS`` are literal
+    tuples in ``api/schema.py``; ``METRIC_ROW_KEYS`` is derived at
+    runtime from the ``Metrics`` dataclass, so here it is re-derived
+    from the dataclass *source* in ``core/simulator.py`` — same single
+    source of truth, read statically.
+    """
+    out: Dict[str, Tuple[str, ...]] = {
+        "FAILURE_ROW_KEYS": (), "AGG_COLUMNS": (), "KINDS": (),
+        "METRIC_ROW_KEYS": (),
+    }
+    schema = ctx.file(SCHEMA_PY)
+    if schema is not None:
+        for name in ("FAILURE_ROW_KEYS", "AGG_COLUMNS", "KINDS"):
+            val = module_assign(schema, name)
+            tup = tuple_of_strings(val) if val is not None else None
+            if tup:
+                out[name] = tup
+    sim = ctx.file(SIMULATOR_PY)
+    if sim is not None:
+        out["METRIC_ROW_KEYS"] = tuple(
+            name for name, _ in dataclass_fields(sim, "Metrics"))
+    return out

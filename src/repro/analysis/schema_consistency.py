@@ -1,0 +1,197 @@
+"""Schema-consistency rules: row dicts and keys agree with api.schema.
+
+``api/schema.py`` owns the canonical key tuples
+(``METRIC_ROW_KEYS``/``FAILURE_ROW_KEYS``/``AGG_COLUMNS``/``KINDS``);
+``validate_artifact`` enforces them at runtime — but only on the rows a
+given run happens to produce.  These rules enforce them on every *code
+path*, including ones no test executes.
+
+Rules:
+
+* **SC001** — a dict literal shaped like a failure row (contains
+  ``"error"`` plus another failure-row key) must carry *exactly* the
+  ``FAILURE_ROW_KEYS`` — partial hand-rolled failure rows break
+  ``validate_artifact`` only when that path fires in production.
+* **SC002** — a dict literal carrying two or more aggregate columns
+  must carry all of ``AGG_COLUMNS`` (a metric row missing a column
+  validates nowhere).
+* **SC003** — artifact-kind string literals passed to
+  ``artifact_v1``/``wrap_record``/``dump_record``/``Runner.run(kind=)``
+  must be registered in ``schema.KINDS``.
+* **SC004** — near-miss key strings: a subscript key that normalizes
+  (case/underscores stripped) to a canonical schema key but isn't one
+  is a typo the row validator reports only at runtime, if ever.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Tuple
+
+from repro.analysis import project
+from repro.analysis.base import (Finding, ProjectContext, dotted_name,
+                                 str_const)
+
+#: everything under the package — schema drift hides anywhere rows are
+#: built or consumed
+SCOPE = ("repro",)
+
+#: call name (last dotted part) -> positional index of the ``kind`` arg
+_KIND_CALLS = {"artifact_v1": 0, "wrap_record": 0, "dump_record": 1}
+
+
+def _normalize(key: str) -> str:
+    return key.replace("_", "").replace("-", "").strip().lower()
+
+
+class FailureRowShape:
+    rule_id = "SC001"
+    title = "failure-row dict literals carry the full canonical shape"
+    severity = "error"
+
+    def check(self, ctx: ProjectContext) -> List[Finding]:
+        keys = project.schema_key_sets(ctx)["FAILURE_ROW_KEYS"]
+        if not keys:
+            return []
+        canonical = set(keys)
+        marker = canonical - {"error"}
+        out: List[Finding] = []
+        for sf in ctx.python_files(SCOPE):
+            for node in ast.walk(sf.tree):
+                lits = project.dict_literal_keys(node)
+                if lits is None:
+                    continue
+                present = {k for k, _ in lits}
+                if "error" in present and present & marker \
+                        and present != canonical:
+                    missing = sorted(canonical - present)
+                    extra = sorted(present - canonical)
+                    detail = []
+                    if missing:
+                        detail.append(f"missing {missing}")
+                    if extra:
+                        detail.append(f"extra {extra}")
+                    out.append(Finding(
+                        rule=self.rule_id, severity=self.severity,
+                        path=sf.rel, line=node.lineno,
+                        message=f"failure-row-shaped dict literal does "
+                                f"not match schema.FAILURE_ROW_KEYS "
+                                f"({'; '.join(detail)}) — use "
+                                f"schema.failure_row()"))
+        return out
+
+
+class AggregateRowShape:
+    rule_id = "SC002"
+    title = "aggregate-row dict literals carry all AGG_COLUMNS"
+    severity = "error"
+
+    def check(self, ctx: ProjectContext) -> List[Finding]:
+        agg = project.schema_key_sets(ctx)["AGG_COLUMNS"]
+        if not agg:
+            return []
+        canonical = set(agg)
+        out: List[Finding] = []
+        for sf in ctx.python_files(SCOPE):
+            for node in ast.walk(sf.tree):
+                lits = project.dict_literal_keys(node)
+                if lits is None:
+                    continue
+                present = {k for k, _ in lits}
+                hit = present & canonical
+                if len(hit) >= 2 and not canonical <= present:
+                    out.append(Finding(
+                        rule=self.rule_id, severity=self.severity,
+                        path=sf.rel, line=node.lineno,
+                        message=f"aggregate-row dict literal carries "
+                                f"{sorted(hit)} but not all of "
+                                f"schema.AGG_COLUMNS "
+                                f"({sorted(canonical - present)} "
+                                f"missing) — it will fail "
+                                f"validate_artifact or silently drop a "
+                                f"metric"))
+        return out
+
+
+class ArtifactKindRegistered:
+    rule_id = "SC003"
+    title = "artifact kind literals registered in schema.KINDS"
+    severity = "error"
+
+    def check(self, ctx: ProjectContext) -> List[Finding]:
+        kinds = project.schema_key_sets(ctx)["KINDS"]
+        if not kinds:
+            return []
+        out: List[Finding] = []
+        for sf in ctx.python_files(SCOPE):
+            for node in ast.walk(sf.tree):
+                if not isinstance(node, ast.Call):
+                    continue
+                name = dotted_name(node.func)
+                if name is None:
+                    continue
+                fn = name.split(".")[-1]
+                kind: Optional[Tuple[str, int]] = None
+                if fn in _KIND_CALLS:
+                    pos = _KIND_CALLS[fn]
+                    if len(node.args) > pos:
+                        s = str_const(node.args[pos])
+                        if s is not None:
+                            kind = (s, node.args[pos].lineno)
+                # kw form: only on the artifact writers + Runner.run —
+                # plenty of unrelated APIs take a kind= (np.argsort!)
+                if fn in _KIND_CALLS or fn == "run":
+                    for kw in node.keywords:
+                        if kw.arg == "kind":
+                            s = str_const(kw.value)
+                            if s is not None:
+                                kind = (s, kw.value.lineno)
+                if kind is not None and kind[0] not in kinds:
+                    out.append(Finding(
+                        rule=self.rule_id, severity=self.severity,
+                        path=sf.rel, line=kind[1],
+                        message=f"artifact kind {kind[0]!r} is not in "
+                                f"schema.KINDS {tuple(kinds)} — "
+                                f"validate_artifact will reject every "
+                                f"artifact this writes"))
+        return out
+
+
+class NearMissKey:
+    rule_id = "SC004"
+    title = "subscript key is a near-miss of a schema key"
+    severity = "warning"
+
+    def check(self, ctx: ProjectContext) -> List[Finding]:
+        sets = project.schema_key_sets(ctx)
+        canonical: Dict[str, str] = {}
+        exact = set()
+        for tup_name in ("METRIC_ROW_KEYS", "FAILURE_ROW_KEYS",
+                         "AGG_COLUMNS"):
+            for k in sets[tup_name]:
+                canonical.setdefault(_normalize(k), k)
+                exact.add(k)
+        out: List[Finding] = []
+        for sf in ctx.python_files(SCOPE):
+            for node in ast.walk(sf.tree):
+                if not (isinstance(node, ast.Subscript)
+                        and isinstance(node.slice, ast.Constant)
+                        and isinstance(node.slice.value, str)):
+                    continue
+                key = node.slice.value
+                if key in exact:
+                    continue
+                want = canonical.get(_normalize(key))
+                if want is not None:
+                    out.append(Finding(
+                        rule=self.rule_id, severity=self.severity,
+                        path=sf.rel, line=node.lineno,
+                        message=f"key {key!r} looks like schema key "
+                                f"{want!r} but isn't it — typo'd keys "
+                                f"read as KeyError (or, worse, "
+                                f".get() defaults) at runtime"))
+        return out
+
+
+RULES = (FailureRowShape(), AggregateRowShape(),
+         ArtifactKindRegistered(), NearMissKey())

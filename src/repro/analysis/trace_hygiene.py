@@ -1,0 +1,244 @@
+"""JAX trace-hygiene rules for the engine/kernels modules.
+
+Two failure classes, both invisible to the bit-identity tests:
+
+* host operations inside traced code — ``.item()``/``float()`` tracer
+  coercions raise at trace time only on the paths a test reaches, and
+  ``print``/``np.*`` silently execute once per *compile* rather than
+  per step, so they "work" until a shape bucket recompiles;
+* the XLA:CPU copy-insertion hazard (ROADMAP open item 1): inside a
+  ``lax.scan`` body, gathering from a carry array *outside that
+  array's own update chain* forces XLA:CPU to materialize a full copy
+  of the carry every step (measured ~13 µs/512 KB step — 54 µs baseline
+  → 2.4 ms tensor_aware).  Nothing fails; the sweep just runs 40×
+  slower.  The heuristic here flags the *pattern* so every new traced
+  function makes the cost an explicit, reasoned decision.
+
+Rules:
+
+* **TH001** (error) — host side effects / tracer coercions inside a
+  traced function: ``.item()``/``.tolist()``/``.numpy()``, bare
+  ``float()``/``int()``/``bool()`` on non-constants, ``np.*`` calls
+  (dtype constructors excluded), ``print()``, ``time.*``/``random.*``.
+* **TH002** (warning) — copy-insertion hazard: a function that both
+  updates carry state in place (``.at[...].set/add``) and gathers a
+  carry entry into a temporary that escapes the carry's own update
+  chain.  One finding per outermost offending function, anchored at
+  its ``def`` line (pragma the ``def`` with the measured/accepted
+  reason).
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import List, Optional, Set, Tuple, Union
+
+from repro.analysis.base import Finding, ProjectContext, dotted_name
+
+SCOPE = ("repro/core/engine_jax.py", "repro/kernels")
+
+_FuncDef = Union[ast.FunctionDef, ast.AsyncFunctionDef]
+
+#: callables whose function-valued arguments become traced code
+_TRACING_CALLS = {"scan", "fori_loop", "while_loop", "cond", "switch",
+                  "vmap", "pmap", "jit", "pallas_call", "checkpoint",
+                  "remat", "custom_vjp", "grad", "value_and_grad"}
+
+#: numpy members that are legal inside traced code (static dtype/consts)
+_NP_ALLOWED = {"float32", "float64", "int32", "int64", "int8", "int16",
+               "uint8", "uint16", "uint32", "uint64", "bool_",
+               "dtype", "shape", "ndim"}
+
+_COERCIONS = {"float", "int", "bool", "complex"}
+_HOST_METHODS = {"item", "tolist", "numpy"}
+
+
+def _decorator_traced(fn: _FuncDef) -> bool:
+    for dec in fn.decorator_list:
+        target = dec.func if isinstance(dec, ast.Call) else dec
+        name = dotted_name(target) or ""
+        last = name.split(".")[-1]
+        if last in ("jit", "pallas_call", "vmap", "pmap"):
+            return True
+        if last == "partial" and isinstance(dec, ast.Call):
+            for arg in dec.args:
+                inner = dotted_name(arg) or ""
+                if inner.split(".")[-1] in ("jit", "pallas_call",
+                                            "vmap", "pmap"):
+                    return True
+    return False
+
+
+def _names_passed_to_tracers(tree: ast.AST) -> Set[str]:
+    """Function names passed as arguments to scan/jit/pallas_call/…"""
+    out: Set[str] = set()
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        name = dotted_name(node.func) or ""
+        if name.split(".")[-1] not in _TRACING_CALLS:
+            continue
+        for arg in list(node.args) + [kw.value for kw in node.keywords]:
+            if isinstance(arg, ast.Name):
+                out.add(arg.id)
+    return out
+
+
+def _traced_functions(tree: ast.AST) -> List[_FuncDef]:
+    """Outermost traced functions (decorated, or passed by name to a
+    tracing call); nested defs inherit traced-ness implicitly because
+    callers scan the whole subtree."""
+    passed = _names_passed_to_tracers(tree)
+    traced: List[_FuncDef] = []
+
+    def walk(node: ast.AST, inside: bool) -> None:
+        for child in ast.iter_child_nodes(node):
+            if (isinstance(child, (ast.FunctionDef,
+                                   ast.AsyncFunctionDef))
+                    and not inside
+                    and (_decorator_traced(child)
+                         or child.name in passed)):
+                traced.append(child)
+                walk(child, True)
+            else:
+                walk(child, inside)
+
+    walk(tree, False)
+    return traced
+
+
+class HostOpsInTracedCode:
+    rule_id = "TH001"
+    title = "host side effect / tracer coercion in traced code"
+    severity = "error"
+
+    def check(self, ctx: ProjectContext) -> List[Finding]:
+        out: List[Finding] = []
+        for sf in ctx.python_files(SCOPE):
+            for fn in _traced_functions(sf.tree):
+                for node in ast.walk(fn):
+                    if not isinstance(node, ast.Call):
+                        continue
+                    name = dotted_name(node.func)
+                    msg: Optional[str] = None
+                    if (isinstance(node.func, ast.Attribute)
+                            and node.func.attr in _HOST_METHODS):
+                        msg = (f".{node.func.attr}() forces a host "
+                               f"sync — on a tracer it aborts the "
+                               f"trace; in a scan body it cannot "
+                               f"exist")
+                    elif name in _COERCIONS and node.args and not (
+                            isinstance(node.args[0], ast.Constant)):
+                        msg = (f"{name}() on a non-constant inside "
+                               f"traced code coerces a tracer to a "
+                               f"Python scalar (ConcretizationError "
+                               f"at trace time on untested paths)")
+                    elif name is not None and name.split(".")[0] == "np" \
+                            and name.split(".")[-1] not in _NP_ALLOWED:
+                        msg = (f"{name}() is a host numpy op — inside "
+                               f"traced code it runs at trace time on "
+                               f"abstract values, not per step")
+                    elif name == "print":
+                        msg = ("print() in traced code executes once "
+                               "per compile, not per step — use "
+                               "jax.debug.print")
+                    elif name is not None and name.split(".")[0] in (
+                            "time", "random"):
+                        msg = (f"{name}() makes the traced program "
+                               f"depend on host state at trace time")
+                    if msg:
+                        out.append(Finding(
+                            rule=self.rule_id, severity=self.severity,
+                            path=sf.rel, line=node.lineno,
+                            message=f"in traced function "
+                                    f"{fn.name}(): {msg}"))
+        return out
+
+
+def _carry_updates(fn: _FuncDef) -> Set[str]:
+    """Names of dict-carries updated via ``X[k] = <expr with .at[…]>``
+    and array-carries updated via ``Y = Y.at[…]…``."""
+    carries: Set[str] = set()
+    for node in ast.walk(fn):
+        if not isinstance(node, ast.Assign) or len(node.targets) != 1:
+            continue
+        tgt = node.targets[0]
+        has_at = any(isinstance(n, ast.Attribute) and n.attr == "at"
+                     for n in ast.walk(node.value))
+        if not has_at:
+            continue
+        if isinstance(tgt, ast.Subscript) and isinstance(tgt.value,
+                                                         ast.Name):
+            carries.add(tgt.value.id)
+        elif isinstance(tgt, ast.Name):
+            carries.add(tgt.id)
+    return carries
+
+
+def _escaping_gathers(fn: _FuncDef,
+                      carries: Set[str]) -> List[Tuple[int, str]]:
+    """(line, carry) for gathers of carry state bound to plain temps —
+    values that leave the carry's own ``.at[…]`` update chain."""
+    hits: List[Tuple[int, str]] = []
+    for node in ast.walk(fn):
+        if not isinstance(node, ast.Assign):
+            continue
+        if not all(isinstance(t, ast.Name) for t in node.targets):
+            continue  # only temp bindings escape the update chain
+        for sub in ast.walk(node.value):
+            if not isinstance(sub, ast.Subscript):
+                continue
+            base = sub.value
+            # st["k"][idx] — gather from a dict carry entry
+            if (isinstance(base, ast.Subscript)
+                    and isinstance(base.value, ast.Name)
+                    and base.value.id in carries):
+                hits.append((sub.lineno, base.value.id))
+            # arr[idx] — gather from an array carry (non-slice index)
+            elif (isinstance(base, ast.Name) and base.id in carries
+                    and not isinstance(sub.slice, ast.Slice)):
+                hits.append((sub.lineno, base.id))
+    return hits
+
+
+class CopyInsertionHazard:
+    rule_id = "TH002"
+    title = "pre-update gather on a scan carry (XLA:CPU copy hazard)"
+    severity = "warning"
+
+    def check(self, ctx: ProjectContext) -> List[Finding]:
+        out: List[Finding] = []
+        for sf in ctx.python_files(SCOPE):
+            flagged_spans: List[Tuple[int, int]] = []
+            for node in ast.walk(sf.tree):
+                if not isinstance(node, (ast.FunctionDef,
+                                         ast.AsyncFunctionDef)):
+                    continue
+                end = getattr(node, "end_lineno", node.lineno)
+                if any(a <= node.lineno <= b for a, b in flagged_spans):
+                    continue  # one finding per outermost offender
+                carries = _carry_updates(node)
+                if not carries:
+                    continue
+                gathers = _escaping_gathers(node, carries)
+                if not gathers:
+                    continue
+                first_line, first_carry = gathers[0]
+                flagged_spans.append((node.lineno, end))
+                out.append(Finding(
+                    rule=self.rule_id, severity=self.severity,
+                    path=sf.rel, line=node.lineno,
+                    message=f"{node.name}() gathers carry state "
+                            f"({len(gathers)} site(s), first at line "
+                            f"{first_line} on {first_carry!r}) into "
+                            f"temporaries outside the carry's own "
+                            f".at[] update chain — on XLA:CPU "
+                            f"copy-insertion materializes a full copy "
+                            f"of the carry per scan step (ROADMAP open "
+                            f"item 1); fuse the gather into the update "
+                            f"or pragma the def with the accepted "
+                            f"cost"))
+        return out
+
+
+RULES = (HostOpsInTracedCode(), CopyInsertionHazard())

@@ -50,7 +50,12 @@ SCHEMA_V1 = "repro.artifact.v1"
 JOURNAL_SCHEMA = "repro.journal.v1"
 
 #: artifact kinds the front door emits
-KINDS = ("table", "sweep", "bench", "plan", "dryrun_cell")
+KINDS = ("table", "sweep", "bench", "plan", "dryrun_cell", "lint")
+
+#: per-finding columns of a ``lint`` artifact (repro.analysis Finding
+#: rows — the one non-metric row shape, hence its own columns header)
+LINT_ROW_KEYS = ("rule", "severity", "path", "line", "message",
+                 "suppressed", "reason")
 
 #: the structured failure row every execute path (pool, serial map)
 #: records for a permanently-failed cell — canonical keys, one shape
@@ -153,7 +158,8 @@ def artifact_v1(kind: str, spec: Mapping[str, Any],
         "spec": dict(spec),
         "spec_hash": spec_hash(spec),
         "provenance": dict(provenance or {}),
-        "columns": list(AGG_COLUMNS),
+        "columns": list(LINT_ROW_KEYS if kind == "lint"
+                        else AGG_COLUMNS),
         "rows": [dict(r) for r in rows],
         "result": dict(result or {}),
     }
@@ -203,8 +209,9 @@ def validate_artifact(art: Mapping[str, Any]) -> Dict[str, Any]:
         for k in FAILURE_ROW_KEYS:
             _require(k in f, f"failures[{i}]: missing failure-row "
                      f"key {k!r}")
-    _require(art.get("columns") == list(AGG_COLUMNS),
-             f"columns {art.get('columns')!r} != canonical {AGG_COLUMNS}")
+    want_cols = LINT_ROW_KEYS if kind == "lint" else AGG_COLUMNS
+    _require(art.get("columns") == list(want_cols),
+             f"columns {art.get('columns')!r} != canonical {want_cols}")
     rows = art.get("rows")
     _require(isinstance(rows, list)
              and all(isinstance(r, Mapping) for r in rows),
@@ -229,6 +236,18 @@ def validate_artifact(art: Mapping[str, Any]) -> Dict[str, Any]:
         _require(len(rows) > 0, "bench artifact has no rows")
         for i, row in enumerate(rows):
             _require("name" in row, f"rows[{i}]: missing bench name")
+    elif kind == "lint":
+        # zero rows is the GOOD case (clean tree); each row is one
+        # repro.analysis Finding
+        for i, row in enumerate(rows):
+            for k in LINT_ROW_KEYS:
+                _require(k in row, f"rows[{i}]: missing lint "
+                         f"column {k!r}")
+            _require(row["severity"] in ("error", "warning"),
+                     f"rows[{i}]: bad severity {row['severity']!r}")
+            _require(isinstance(row["line"], int)
+                     and not isinstance(row["line"], bool),
+                     f"rows[{i}]: line is not an int")
     else:  # plan / dryrun_cell: the payload lives in result
         _require(len(result) > 0, f"{kind} artifact has an empty result")
     return dict(art)

@@ -12,6 +12,9 @@ Subcommands (shared flags: ``--smoke`` / ``--scale`` / ``--preset`` /
     repro serve    serving launcher (delegates to repro.launch.serve)
     repro bench    engine throughput; ``--smoke`` = the CI gate bundle
                    (table + sweep + plan smokes)
+    repro lint     invariant-enforcing static analysis (engine parity,
+                   determinism, schema, jax trace hygiene); exits
+                   nonzero on unsuppressed findings
 
 Every artifact written lands under ``artifacts/`` as a validated
 ArtifactV1 (see ``repro.api.schema``).  The legacy module entry points
@@ -429,6 +432,62 @@ def cmd_bench(args: argparse.Namespace) -> int:
 
 
 # ---------------------------------------------------------------------------
+# repro lint
+# ---------------------------------------------------------------------------
+def run_lint_cli(rules: Optional[List[str]] = None,
+                 as_json: bool = False, out: Optional[str] = None,
+                 src_root: Optional[Path] = None,
+                 tool: str = "python -m repro lint") -> int:
+    """The ``repro lint`` body: run the rule catalog over ``src/``,
+    print findings, write the lint ArtifactV1, exit nonzero on any
+    unsuppressed finding."""
+    from repro.analysis import RULES, run_lint
+    from repro.analysis.base import ProjectContext
+    from repro.api.schema import artifact_v1
+
+    root = Path(src_root) if src_root else REPO_ROOT / "src"
+    ctx = ProjectContext(root)
+    try:
+        findings = run_lint(ctx, only=rules or None)
+    except KeyError as e:
+        print(f"[lint] {e.args[0]}", file=sys.stderr)
+        return 2
+    rows = [f.as_row() for f in findings]
+    unsuppressed = [f for f in findings if not f.suppressed]
+    suppressed = [f for f in findings if f.suppressed]
+
+    if as_json:
+        print(json.dumps(rows, indent=1))
+    else:
+        for f in unsuppressed:
+            print(f"{f.location()}: {f.severity}[{f.rule}] {f.message}")
+        print(f"[lint] {len(list(RULES if not rules else rules))} "
+              f"rule(s) over {len(ctx.loaded_files())} file(s): "
+              f"{len(unsuppressed)} finding(s), "
+              f"{len(suppressed)} suppressed")
+
+    spec = {"name": "lint", "root": "src",
+            "rules": sorted(rules) if rules else sorted(RULES)}
+    by_sev = {"error": 0, "warning": 0}
+    for f in unsuppressed:
+        by_sev[f.severity] = by_sev.get(f.severity, 0) + 1
+    art = artifact_v1(
+        "lint", spec, rows,
+        result={"n_findings": len(unsuppressed),
+                "n_suppressed": len(suppressed),
+                "by_severity": by_sev,
+                "clean": not unsuppressed},
+        provenance={"tool": tool})
+    _write_artifact(art, ARTIFACTS / "lint" / "lint.json", out)
+    return 1 if unsuppressed else 0
+
+
+def cmd_lint(args: argparse.Namespace) -> int:
+    return run_lint_cli(rules=args.rule, as_json=args.json,
+                        out=args.out)
+
+
+# ---------------------------------------------------------------------------
 # entry
 # ---------------------------------------------------------------------------
 def main(argv: Optional[List[str]] = None) -> int:
@@ -471,6 +530,20 @@ def main(argv: Optional[List[str]] = None) -> int:
                    help="training launcher (args pass through)")
     sub.add_parser("serve", add_help=False,
                    help="serving launcher (args pass through)")
+
+    ln = sub.add_parser("lint", help="invariant-enforcing static "
+                                     "analysis; exits nonzero on "
+                                     "unsuppressed findings")
+    ln.add_argument("--rule", action="append", default=[],
+                    metavar="ID",
+                    help="run only this rule id (repeatable, e.g. "
+                         "--rule EP001); default: full catalog")
+    ln.add_argument("--json", action="store_true",
+                    help="print findings as JSON rows instead of text")
+    ln.add_argument("--out", default=None,
+                    help="artifact path override "
+                         "(default artifacts/lint/lint.json)")
+    ln.set_defaults(func=cmd_lint)
 
     b = sub.add_parser("bench", help="engine throughput bench; --smoke "
                                      "= table+sweep+plan CI gates")

@@ -496,6 +496,7 @@ def _h64j(x):
     return x
 
 
+# repro: lint-ok[TH002] known copy-insertion hazard, ROADMAP open item 1 — pre-update gathers on the dict carry cost ~13 µs/512 KB step on XLA:CPU; accepted until the fused-update rewrite lands
 def _make_step(S: StaticConfig):
     i64 = jnp.int64
     f64 = jnp.float64

@@ -44,7 +44,11 @@ _lib_tried = False
 
 def _build_lib() -> Optional[ctypes.CDLL]:
     src = _SRC.read_bytes()
-    tag = hashlib.sha256(src).hexdigest()[:16]
+    # REPRO_SIM_CFLAGS: extra compile/link flags (the sanitizer CI leg
+    # passes -fsanitize=address,undefined); part of the cache key so a
+    # sanitized .so never shadows the plain one
+    extra = os.environ.get("REPRO_SIM_CFLAGS", "").split()
+    tag = hashlib.sha256(src + " ".join(extra).encode()).hexdigest()[:16]
     so = _BUILD / f"sim_kernel_{tag}.so"
     if not so.exists():
         _BUILD.mkdir(exist_ok=True)
@@ -56,7 +60,7 @@ def _build_lib() -> Optional[ctypes.CDLL]:
         # -ffp-contract=off: no FMA fusing — float ops must round exactly
         # like the Python engine's
         cmd = [cc, "-O2", "-ffp-contract=off", "-fPIC", "-shared",
-               str(_SRC), "-o", str(tmp)]
+               *extra, str(_SRC), "-o", str(tmp)]
         try:
             subprocess.run(cmd, check=True, capture_output=True,
                            timeout=120)

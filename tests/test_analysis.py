@@ -1,0 +1,421 @@
+"""Tests for the ``repro lint`` static-analysis subsystem.
+
+Three layers:
+
+* **fixture trees** — each rule family gets a tmp source tree mirroring
+  the ``repro/...`` layout with a violating, a clean, and a
+  pragma-suppressed variant (rules address files by root-relative path,
+  so the same rule objects run unchanged against fixtures);
+* **mutation tests** — copy the *real* engine sources into a fixture
+  tree, inject a defect (an unplumbed knob, a swapped C enum slot), and
+  assert the engine-parity family catches exactly that defect;
+* **acceptance** — the full catalog over the real ``src/`` tree must
+  report zero unsuppressed findings (the same gate CI enforces).
+"""
+
+from __future__ import annotations
+
+import json
+import shutil
+from pathlib import Path
+
+import pytest
+
+from repro.analysis import RULES, run_lint
+from repro.analysis.base import ProjectContext
+from repro.analysis import determinism, engine_parity, schema_consistency
+from repro.analysis import trace_hygiene
+from repro.api.schema import validate_artifact
+
+REPO_SRC = Path(__file__).resolve().parents[1] / "src"
+
+
+def make_tree(root: Path, files: dict) -> ProjectContext:
+    """Write ``{relpath: source}`` under ``root`` and wrap it."""
+    for rel, text in files.items():
+        p = root / rel
+        p.parent.mkdir(parents=True, exist_ok=True)
+        p.write_text(text)
+    return ProjectContext(root)
+
+
+def unsuppressed(findings, rule=None):
+    return [f for f in findings if not f.suppressed
+            and (rule is None or f.rule == rule)]
+
+
+# ---------------------------------------------------------------------------
+# rule catalog / framework
+# ---------------------------------------------------------------------------
+def test_catalog_has_all_families():
+    fams = {rid[:2] for rid in RULES}
+    assert {"EP", "DT", "SC", "TH"} <= fams
+    for rid, rule in RULES.items():
+        assert rule.rule_id == rid
+        assert rule.severity in ("error", "warning")
+        assert rule.title
+
+
+def test_unknown_rule_id_raises(tmp_path):
+    ctx = make_tree(tmp_path, {"repro/__init__.py": ""})
+    with pytest.raises(KeyError):
+        run_lint(ctx, only=["NOPE999"])
+
+
+# ---------------------------------------------------------------------------
+# determinism family
+# ---------------------------------------------------------------------------
+DT_BAD = """\
+import random, time, os
+
+def pick(items):
+    x = random.choice(items)
+    t = time.time()
+    e = os.urandom(8)
+    s = {1, 2, 3}
+    out = [v for v in s]
+    return x, t, e, out
+"""
+
+DT_CLEAN = """\
+import random, time
+
+def pick(items, seed):
+    rng = random.Random(seed)
+    x = rng.choice(items)
+    s = {1, 2, 3}
+    out = [v for v in sorted(s)]
+    ok = 3 in s
+    return x, out, ok
+"""
+
+
+def test_determinism_violations_fire(tmp_path):
+    ctx = make_tree(tmp_path, {"repro/core/mod.py": DT_BAD})
+    fs = run_lint(ctx, only=["DT001", "DT002", "DT003"])
+    assert unsuppressed(fs, "DT001"), "random.choice not flagged"
+    got_dt2 = {f.line for f in unsuppressed(fs, "DT002")}
+    assert len(got_dt2) == 2, "time.time + os.urandom expected"
+    assert unsuppressed(fs, "DT003"), "set comprehension not flagged"
+    for f in fs:
+        assert f.path == "repro/core/mod.py"
+        assert f.line > 0
+
+
+def test_determinism_clean_tree_is_clean(tmp_path):
+    ctx = make_tree(tmp_path, {"repro/core/mod.py": DT_CLEAN})
+    fs = run_lint(ctx, only=["DT001", "DT002", "DT003"])
+    assert not unsuppressed(fs), [f.as_row() for f in fs]
+
+
+def test_determinism_scope_excludes_benchmarks(tmp_path):
+    # same violations outside core/runtime/sweep/api: out of scope
+    ctx = make_tree(tmp_path, {"repro/launch/mod.py": DT_BAD})
+    fs = run_lint(ctx, only=["DT001", "DT002", "DT003"])
+    assert not unsuppressed(fs)
+
+
+def test_pragma_suppresses_with_reason(tmp_path):
+    src = DT_BAD.replace(
+        "t = time.time()",
+        "t = time.time()  # repro: lint-ok[DT002] wall_s is volatile")
+    ctx = make_tree(tmp_path, {"repro/core/mod.py": src})
+    fs = run_lint(ctx, only=["DT002"])
+    sup = [f for f in fs if f.suppressed]
+    assert len(sup) == 1 and sup[0].reason == "wall_s is volatile"
+    assert len(unsuppressed(fs, "DT002")) == 1  # os.urandom still fires
+
+
+def test_pragma_on_line_above(tmp_path):
+    src = DT_BAD.replace(
+        "    t = time.time()",
+        "    # repro: lint-ok[DT002] timer baseline only\n"
+        "    t = time.time()")
+    ctx = make_tree(tmp_path, {"repro/core/mod.py": src})
+    fs = run_lint(ctx, only=["DT002"])
+    assert any(f.suppressed for f in fs)
+
+
+def test_reasonless_pragma_is_lnt001(tmp_path):
+    src = DT_BAD.replace(
+        "t = time.time()",
+        "t = time.time()  # repro: lint-ok[DT002]")
+    ctx = make_tree(tmp_path, {"repro/core/mod.py": src})
+    fs = run_lint(ctx, only=["DT002"])
+    assert unsuppressed(fs, "LNT001"), "reason-less pragma must error"
+
+
+def test_stale_pragma_is_lnt002_on_full_runs_only(tmp_path):
+    src = DT_CLEAN + "\nY = 1  # repro: lint-ok[DT001] nothing here\n"
+    ctx = make_tree(tmp_path, {"repro/core/mod.py": src})
+    full = run_lint(ctx)
+    assert unsuppressed(full, "LNT002"), "stale pragma must warn"
+    narrowed = run_lint(ctx, only=["DT001"])
+    assert not unsuppressed(narrowed, "LNT002")
+
+
+def test_pragma_docs_are_not_pragmas(tmp_path):
+    # pragma syntax quoted in a docstring must not register
+    src = ('"""Docs: suppress with\n'
+           '    x()  # repro: lint-ok[DT001] reason\n'
+           '"""\nX = 1\n')
+    ctx = make_tree(tmp_path, {"repro/core/mod.py": src})
+    fs = run_lint(ctx)
+    assert not unsuppressed(fs, "LNT002")
+
+
+# ---------------------------------------------------------------------------
+# schema-consistency family
+# ---------------------------------------------------------------------------
+SC_SCHEMA = """\
+KINDS = ("table", "sweep")
+FAILURE_ROW_KEYS = ("workload", "config", "fault", "error")
+AGG_COLUMNS = ("amat", "l2_miss")
+"""
+SC_SIM = """\
+import dataclasses
+
+@dataclasses.dataclass
+class Metrics:
+    amat: float = 0.0
+    hits: int = 0
+"""
+
+
+def sc_tree(tmp_path, body):
+    return make_tree(tmp_path, {
+        "repro/api/schema.py": SC_SCHEMA,
+        "repro/core/simulator.py": SC_SIM,
+        "repro/api/rows.py": body,
+    })
+
+
+def test_schema_partial_failure_row_fires(tmp_path):
+    ctx = sc_tree(tmp_path, 'row = {"error": "boom", "fault": "hang"}\n')
+    fs = run_lint(ctx, only=["SC001"])
+    hits = unsuppressed(fs, "SC001")
+    assert len(hits) == 1 and "workload" in hits[0].message
+
+
+def test_schema_full_failure_row_clean(tmp_path):
+    ctx = sc_tree(tmp_path, 'row = {"workload": "w", "config": "c", '
+                            '"fault": "", "error": ""}\n')
+    assert not unsuppressed(run_lint(ctx, only=["SC001"]))
+
+
+def test_schema_partial_agg_row_fires(tmp_path):
+    ctx = sc_tree(tmp_path, 'agg = {"amat": 1.0, "l2_miss": 0.2}\n'
+                            'bad = {"amat": 1.0, "l2_miss": 0.2, '
+                            '"extra": 1}\n'
+                            'partial = {"amat": 1.0}\n')
+    # two-of-two is fine, superset is fine, single column is not "agg"
+    assert not unsuppressed(run_lint(ctx, only=["SC002"]))
+    ctx2 = make_tree(tmp_path / "b", {
+        "repro/api/schema.py": SC_SCHEMA.replace(
+            '"amat", "l2_miss"', '"amat", "l2_miss", "speedup"'),
+        "repro/core/simulator.py": SC_SIM,
+        "repro/api/rows.py": 'agg = {"amat": 1.0, "l2_miss": 0.2}\n',
+    })
+    assert unsuppressed(run_lint(ctx2, only=["SC002"]), "SC002")
+
+
+def test_schema_unregistered_kind_fires(tmp_path):
+    ctx = sc_tree(tmp_path,
+                  'from repro.api.schema import artifact_v1\n'
+                  'a = artifact_v1("tabel", {}, [])\n'
+                  'b = artifact_v1("table", {}, [])\n')
+    hits = unsuppressed(run_lint(ctx, only=["SC003"]), "SC003")
+    assert len(hits) == 1 and "'tabel'" in hits[0].message
+
+
+def test_schema_kind_kwarg_ignores_unrelated_apis(tmp_path):
+    # np.argsort(kind="stable") must NOT trip SC003
+    ctx = sc_tree(tmp_path,
+                  'import numpy as np\n'
+                  'i = np.argsort([2, 1], kind="stable")\n')
+    assert not unsuppressed(run_lint(ctx, only=["SC003"]))
+
+
+def test_schema_near_miss_key_warns(tmp_path):
+    ctx = sc_tree(tmp_path, 'x = row["AMAT"]\ny = row["amat"]\n')
+    hits = unsuppressed(run_lint(ctx, only=["SC004"]), "SC004")
+    assert len(hits) == 1 and hits[0].severity == "warning"
+
+
+# ---------------------------------------------------------------------------
+# trace-hygiene family
+# ---------------------------------------------------------------------------
+TH_BAD = """\
+import jax
+import numpy as np
+
+@jax.jit
+def f(x):
+    print(x)
+    y = float(x)
+    z = np.mean(x)
+    return x.item() + y + z
+
+def step(st, x):
+    v = st["a"][x]
+    st["a"] = st["a"].at[x].set(v + 1)
+    return st, v
+"""
+
+TH_CLEAN = """\
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+@jax.jit
+def f(x):
+    jax.debug.print("x={x}", x=x)
+    y = x.astype(np.float32)
+    return jnp.mean(y)
+
+def host_helper(x):
+    # not traced: host ops are fine here
+    print(x)
+    return float(np.mean(x))
+
+def step(st, x):
+    st["a"] = st["a"].at[x].add(1)
+    return st, x
+"""
+
+
+def test_trace_hygiene_violations_fire(tmp_path):
+    ctx = make_tree(tmp_path, {"repro/kernels/mod.py": TH_BAD})
+    fs = run_lint(ctx, only=["TH001", "TH002"])
+    msgs = [f.message for f in unsuppressed(fs, "TH001")]
+    assert any("print" in m for m in msgs)
+    assert any("float()" in m for m in msgs)
+    assert any("np.mean" in m for m in msgs)
+    assert any(".item()" in m for m in msgs)
+    th2 = unsuppressed(fs, "TH002")
+    assert len(th2) == 1 and "step" in th2[0].message
+
+
+def test_trace_hygiene_clean_tree_is_clean(tmp_path):
+    ctx = make_tree(tmp_path, {"repro/kernels/mod.py": TH_CLEAN})
+    fs = run_lint(ctx, only=["TH001", "TH002"])
+    assert not unsuppressed(fs), [f.as_row() for f in fs]
+
+
+def test_trace_hygiene_th002_pragma_on_def(tmp_path):
+    src = TH_BAD.replace(
+        "def step(st, x):",
+        "# repro: lint-ok[TH002] accepted copy cost, ROADMAP item 1\n"
+        "def step(st, x):")
+    ctx = make_tree(tmp_path, {"repro/kernels/mod.py": src})
+    fs = run_lint(ctx, only=["TH002"])
+    assert not unsuppressed(fs, "TH002")
+    assert any(f.suppressed for f in fs)
+
+
+# ---------------------------------------------------------------------------
+# engine-parity family: mutation tests against the REAL sources
+# ---------------------------------------------------------------------------
+EP_FILES = ("repro/core/params.py", "repro/core/native.py",
+            "repro/core/engine_jax.py", "repro/core/_sim_kernel.c")
+
+
+def real_tree(tmp_path) -> ProjectContext:
+    for rel in EP_FILES:
+        dst = tmp_path / rel
+        dst.parent.mkdir(parents=True, exist_ok=True)
+        shutil.copy(REPO_SRC / rel, dst)
+    return ProjectContext(tmp_path)
+
+
+EP_ONLY = ["EP001", "EP002", "EP003", "EP004"]
+
+
+def test_engine_parity_clean_on_real_sources(tmp_path):
+    fs = run_lint(real_tree(tmp_path), only=EP_ONLY)
+    assert not unsuppressed(fs), [f.as_row() for f in fs]
+
+
+def test_mutation_unplumbed_knob_fires_ep002(tmp_path):
+    real_tree(tmp_path)
+    p = tmp_path / "repro/core/params.py"
+    src = p.read_text().replace(
+        "class PrefetchParams:",
+        "class PrefetchParams:\n    ghost_knob: int = 7")
+    p.write_text(src)
+    hits = unsuppressed(run_lint(ProjectContext(tmp_path),
+                                 only=["EP002"]), "EP002")
+    assert len(hits) == 1
+    assert "ghost_knob" in hits[0].message
+    assert hits[0].path == "repro/core/params.py"
+
+
+def test_mutation_undeclared_lane_field_fires_ep001(tmp_path):
+    real_tree(tmp_path)
+    p = tmp_path / "repro/core/params.py"
+    src = p.read_text().replace('"ta_decay"', '"ta_decay", "ghost_lane"')
+    assert src != p.read_text(), "LANE_INT_FIELDS anchor moved"
+    p.write_text(src)
+    hits = unsuppressed(run_lint(ProjectContext(tmp_path),
+                                 only=["EP001"]), "EP001")
+    assert any("ghost_lane" in f.message for f in hits)
+
+
+def test_mutation_swapped_c_enum_fires_ep003(tmp_path):
+    real_tree(tmp_path)
+    c = tmp_path / "repro/core/_sim_kernel.c"
+    src = c.read_text().replace("CD_ML_THRESH", "CD_SWAPPED", 1)
+    assert src != c.read_text()
+    c.write_text(src)
+    hits = unsuppressed(run_lint(ProjectContext(tmp_path),
+                                 only=["EP003"]), "EP003")
+    assert len(hits) == 1 and "slot" in hits[0].message
+
+
+def test_mutation_unread_jax_slot_fires_ep004(tmp_path):
+    real_tree(tmp_path)
+    j = tmp_path / "repro/core/engine_jax.py"
+    # blind the jax engine to one config slot
+    src = j.read_text().replace("CD_HP_MIGCOST", "CD_ML_THRESH")
+    assert src != j.read_text()
+    j.write_text(src)
+    hits = unsuppressed(run_lint(ProjectContext(tmp_path),
+                                 only=["EP004"]), "EP004")
+    assert any("CD_HP_MIGCOST" in f.message for f in hits)
+
+
+# ---------------------------------------------------------------------------
+# CLI + artifact + repo acceptance
+# ---------------------------------------------------------------------------
+def test_cli_exit_codes_and_artifact(tmp_path):
+    from repro.cli import run_lint_cli
+
+    make_tree(tmp_path / "bad", {"repro/core/mod.py": DT_BAD})
+    out = tmp_path / "lint_bad.json"
+    rc = run_lint_cli(rules=["DT001", "DT002", "DT003"],
+                      src_root=tmp_path / "bad", out=str(out))
+    assert rc == 1
+    art = json.loads(out.read_text())
+    validate_artifact(art)
+    assert art["kind"] == "lint"
+    assert art["result"]["n_findings"] == len(art["rows"]) > 0
+    assert art["result"]["clean"] is False
+
+    make_tree(tmp_path / "ok", {"repro/core/mod.py": DT_CLEAN})
+    out2 = tmp_path / "lint_ok.json"
+    rc = run_lint_cli(rules=["DT001", "DT002", "DT003"],
+                      src_root=tmp_path / "ok", out=str(out2))
+    assert rc == 0
+    art2 = json.loads(out2.read_text())
+    validate_artifact(art2)
+    assert art2["result"]["clean"] is True and art2["rows"] == []
+
+
+def test_repo_tree_lints_clean():
+    """The merge gate: the full catalog over the real src/ tree."""
+    fs = run_lint(ProjectContext(REPO_SRC))
+    bad = unsuppressed(fs)
+    assert not bad, "repo must lint clean:\n" + "\n".join(
+        f"{f.location()} {f.rule} {f.message}" for f in bad)
+    # every suppression in the real tree carries a reason
+    assert all(f.reason for f in fs if f.suppressed)
